@@ -1,0 +1,77 @@
+"""Roofline table (deliverable g): collect artifacts/dryrun/*.json into the
+per-(arch x shape x mesh) table used by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(dryrun_dir="artifacts/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        try:
+            recs.append(json.load(open(path)))
+        except json.JSONDecodeError:
+            pass
+    return recs
+
+
+def format_table(recs, mesh="single", log=print):
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            rows.append((r["arch"], r["shape"], "skipped", r.get("reason", "")))
+            continue
+        if r.get("status") != "ok":
+            rows.append((r["arch"], r["shape"], r.get("status", "?"), ""))
+            continue
+        rf = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"], "ok",
+            f"c={rf['compute_s']:.3f}s m={rf['memory_s']:.3f}s "
+            f"x={rf['collective_s']:.3f}s dom={rf['dominant'][:4]} "
+            f"frac={rf['roofline_fraction']:.3f} "
+            f"useful={rf['useful_flops_ratio']:.2f} "
+            f"fit16G={'Y' if r['memory'].get('fits_16g_hbm') else 'N'}"
+        ))
+    log(f"== Roofline baselines ({mesh}-pod mesh) ==")
+    log(f"{'arch':18s} {'shape':12s} {'status':8s} terms")
+    for arch, shape, status, detail in rows:
+        log(f"{arch:18s} {shape:12s} {status:8s} {detail}")
+    log("")
+    return rows
+
+
+def summarize(recs, log=print):
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    bad = [r for r in recs if r.get("status") not in ("ok", "skipped")]
+    log(f"cells: {len(ok)} ok, {len(skipped)} skipped (documented), {len(bad)} failed")
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+        collb = max(ok, key=lambda r: r["roofline"]["collective_s"]
+                    / max(r["roofline"]["step_time_bound_s"], 1e-12))
+        log(f"worst roofline fraction: {worst['arch']}/{worst['shape']} "
+            f"({worst['roofline']['roofline_fraction']:.4f})")
+        log(f"most collective-bound:   {collb['arch']}/{collb['shape']}")
+    return {"ok": len(ok), "skipped": len(skipped), "failed": len(bad)}
+
+
+def run(log=print):
+    recs = load_records()
+    if not recs:
+        log("== Roofline: no dry-run artifacts yet (run repro.launch.run_all_dryruns) ==\n")
+        return {"roofline": None}
+    for mesh in ("single", "multi"):
+        if any(r.get("mesh") == mesh for r in recs):
+            format_table(recs, mesh, log)
+    stats = summarize(recs, log)
+    log("")
+    return {"roofline": stats}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Benchmark harness entrypoint: one benchmark per paper table/figure plus
+the roofline collector.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+import argparse
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also run the CNN/CIFAR-scale comparison (slower)")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    from benchmarks import (fig_curves, roofline, table1_comm_model,
+                            table2_rounds_bits, table3_comm_time)
+
+    results = {}
+    results.update(table1_comm_model.run())
+    results.update(table2_rounds_bits.run(quick=not args.full))
+    results.update(table3_comm_time.run())
+    results.update(fig_curves.run())
+    results.update(roofline.run())
+    print(f"benchmarks.run complete in {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

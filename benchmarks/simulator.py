@@ -1,0 +1,147 @@
+"""Single-device M-worker SASG simulator (paper Section 5.1 setting).
+
+The paper's own experiments "simulated ten workers"; this does the same:
+a jit'd step that loops over M logical workers (vmapped grads), applies the
+selection rule + compressor per worker, and aggregates per eq. (8). It reuses
+exactly the core library's compressors/selection — only the transport
+(shard_map collectives) is replaced by an in-memory sum — so algorithmic
+rounds/bits counts match the distributed path bit-for-bit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compressors import build_compressor
+from repro.core.sasg import SASGConfig
+from repro.core.selection import SelectionState, advance_tau, push_window, should_send
+from repro.core.types import tree_sq_norm, tree_sub, tree_where, tree_zeros_like
+
+
+@dataclass
+class SimState:
+    params: object
+    comp_state: object      # per-worker (stacked M) compressor state
+    stale_cache: object     # per-worker last payload (stacked)
+    stale_params: object    # per-worker (stacked)
+    tau: jax.Array          # (M,)
+    window: jax.Array       # (D,)
+    step: jax.Array
+    rounds: float = 0.0
+    bits_paper: float = 0.0
+
+
+def make_simulator(cfg: SASGConfig, loss_fn: Callable, M: int):
+    comp = build_compressor(cfg.compressor)
+    sel = cfg.selection
+
+    def init(params):
+        def stack(t):
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(jnp.asarray(x)[None],
+                                           (M,) + jnp.asarray(x).shape).copy(), t
+            )
+
+        comp_state = stack(comp.init(params))
+        zeros = tree_zeros_like(params, dtype=jnp.float32)
+        payload, _ = comp.compress(comp.init(params), zeros, jax.random.PRNGKey(0))
+        return SimState(
+            params=params,
+            comp_state=comp_state,
+            stale_cache=stack(payload),
+            stale_params=stack(params) if sel.enabled else (),
+            tau=jnp.ones((M,), jnp.int32),
+            window=jnp.zeros((max(sel.max_delay, 1),), jnp.float32),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    grad_fn = jax.grad(loss_fn)
+
+    @jax.jit
+    def _step(params, comp_state, stale_cache, stale_params, tau, window, step,
+              batches, lr, key):
+        # per-worker fresh grads (vmap over the worker batch axis)
+        g_fresh = jax.vmap(lambda b: grad_fn(params, b))(batches)
+
+        if sel.enabled:
+            g_stale = jax.vmap(lambda p, b: grad_fn(p, b))(stale_params, batches)
+            a = jnp.broadcast_to(
+                sel.alpha_scale / jnp.maximum(lr, 1e-12), (sel.max_delay,)
+            ).astype(jnp.float32)
+
+            def decide(gf, gs, t):
+                st = SelectionState(tau=t, window=window)
+                return should_send(sel, gf, gs, st, a, M)
+
+            send = jax.vmap(decide)(g_fresh, g_stale, tau)
+        else:
+            send = jnp.ones((M,), bool)
+        send = send | (step == 0)
+
+        def per_worker(gf, cstate, cache, snd, k):
+            g = jax.tree.map(lambda x: lr * x, gf) if cfg.fold_lr else gf
+            payload, cstate_new = comp.compress(cstate, g, k)
+            payload = tree_where(snd, payload, cache)
+            cstate_new = tree_where(snd, cstate_new, cstate)
+            return payload, cstate_new
+
+        keys = jax.random.split(key, M)
+        payloads, comp_state_new = jax.vmap(per_worker)(
+            g_fresh, comp_state, stale_cache, send, keys
+        )
+
+        # aggregate eq. (8): mean of densified payloads
+        if comp.kind == "sparse":
+            def densify_one(p):
+                return jax.tree.map(
+                    lambda leaf: leaf.densify().reshape(-1),
+                    p, is_leaf=lambda x: hasattr(x, "densify"),
+                )
+
+            dense = jax.vmap(densify_one)(payloads)
+            mean_flat = jax.tree.map(lambda x: x.mean(0), dense)
+            update = jax.tree.map(
+                lambda f, t: f[: t.size].reshape(t.shape), mean_flat, params
+            )
+        else:
+            update = jax.tree.map(lambda x: x.mean(0), payloads)
+
+        if not cfg.fold_lr:
+            update = jax.tree.map(lambda u: lr * u, update)
+        new_params = jax.tree.map(lambda p, u: p - u.astype(p.dtype), params, update)
+
+        if sel.enabled:
+            stale_params_new = jax.vmap(
+                lambda snd, sp: tree_where(snd, params, sp)
+            )(send, stale_params)
+        else:
+            stale_params_new = ()
+        tau_new = jnp.where(send, 1, tau + 1)
+        delta = tree_sq_norm(tree_sub(new_params, params))
+        window_new = push_window(
+            SelectionState(tau=tau[0], window=window), delta
+        )
+        return (new_params, comp_state_new, payloads, stale_params_new, tau_new,
+                window_new, step + 1, send)
+
+    bits_paper = comp.bits_paper
+    bits_wire = comp.bits_wire
+
+    def step(state: SimState, batches, lr, key) -> SimState:
+        (params, cstate, cache, sparams, tau, window, stp, send) = _step(
+            state.params, state.comp_state, state.stale_cache, state.stale_params,
+            state.tau, state.window, state.step, batches, jnp.float32(lr), key,
+        )
+        nsent = float(jnp.sum(send))
+        return SimState(
+            params=params, comp_state=cstate, stale_cache=cache,
+            stale_params=sparams, tau=tau, window=window, step=stp,
+            rounds=state.rounds + nsent,
+            bits_paper=state.bits_paper + nsent * bits_paper(state.params),
+        ), nsent
+
+    return init, step, bits_paper, bits_wire

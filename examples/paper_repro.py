@@ -1,0 +1,29 @@
+"""Paper reproduction (Section 5): the four algorithms — SGD, Sparse, LASG,
+SASG — on the paper's FC/MNIST setting (M=10 workers, 10 samples each,
+top-1%, D=10), reporting rounds & bits to equal accuracy (Table 2) and the
+accuracy-vs-rounds curves (Fig. 2).
+
+  PYTHONPATH=src python examples/paper_repro.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.table2_rounds_bits import run
+
+
+def main():
+    results = run(quick=True)
+    t2 = results["table2"]["fc_mnist"]
+    print("\n== paper Table-2-style summary (synthetic-MNIST, FC-512) ==")
+    print(f"{'method':8s} {'#rounds':>9s} {'#bits':>12s}   (to target accuracy)")
+    for algo in ("sgd", "sparse", "lasg", "sasg"):
+        r = t2[algo]
+        print(f"{algo:8s} {r['rounds_to_target']:9.0f} {r['bits_to_target']:12.3e}")
+    sgd, sasg = t2["sgd"], t2["sasg"]
+    print(f"\nSASG vs SGD: {sgd['rounds_to_target']/max(sasg['rounds_to_target'],1):.1f}x "
+          f"fewer rounds, {sgd['bits_to_target']/max(sasg['bits_to_target'],1):.0f}x fewer bits")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .base import (ARCH_IDS, PAPER_IDS, SHAPES, ModelConfig, MoEConfig,
+                   RGLRUConfig, SSMConfig, ShapeConfig, all_arch_ids,
+                   cell_applicable, get_config, register)

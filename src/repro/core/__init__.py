@@ -1,0 +1,28 @@
+"""SASG core: the paper's contribution as composable JAX transforms."""
+from .compressors import CompressorConfig, CompressorDef, build_compressor
+from .sasg import (
+    GlobalState,
+    PRESETS,
+    SASGConfig,
+    SASGExchange,
+    WorkerState,
+    build_exchange,
+    lasg_config,
+    sasg_config,
+    sgd_config,
+    sparse_config,
+    update_global_state,
+)
+from .selection import SelectionConfig, SelectionState
+from .topk import SparsePayload, block_topk, exact_topk, random_k
+from .types import CommCounters
+
+__all__ = [
+    "CompressorConfig", "CompressorDef", "build_compressor",
+    "GlobalState", "PRESETS", "SASGConfig", "SASGExchange", "WorkerState",
+    "build_exchange", "lasg_config", "sasg_config", "sgd_config",
+    "sparse_config", "update_global_state",
+    "SelectionConfig", "SelectionState",
+    "SparsePayload", "block_topk", "exact_topk", "random_k",
+    "CommCounters",
+]

@@ -1,0 +1,437 @@
+"""Gradient compressors: the paper's top-k + error feedback, and baselines.
+
+A compressor is a pure-functional triple (init, compress, densify-semantics)
+packaged as a ``CompressorDef``. Compression always receives the already
+gamma-folded quantity ``g = lr * grad + error`` (paper eq. 8's g_m^t); error
+feedback state is owned by the compressor and updated *candidately*: the
+caller (sasg.py) commits or discards the candidate state depending on the
+adaptive send/skip decision.
+
+Kinds:
+- ``sparse``: payload is a pytree of SparsePayload (fixed-k values+indices);
+  exchanged with a worker-axis all-gather then local scatter-add (comm.py).
+- ``dense``: payload is a dense tree (possibly quantize-dequantized values);
+  exchanged with a plain psum. Bit accounting still reflects the encoded
+  width (e.g. 1 bit/coord for signSGD), because on a real transport the
+  encoded form is what crosses the wire.
+
+Implemented:
+  identity     — distributed SGD / LASG transport (32d bits per upload)
+  topk_ef      — paper's T_k with error feedback (32k bits) [SASG/Sparse]
+  randk        — unbiased random-k (Wangni et al., 2018)
+  qsgd         — QSGD stochastic quantization (Alistarh et al., 2017)
+  signsgd_ef   — 1-bit sign with error feedback (Karimireddy et al., 2019)
+  terngrad     — ternary stochastic quantization (Wen et al., 2017)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import topk as topk_lib
+from .types import (
+    Tree,
+    ceil_div,
+    tree_flatten_concat,
+    tree_size,
+    tree_unflatten_concat,
+    tree_zeros_like,
+)
+
+
+@dataclass(frozen=True)
+class CompressorConfig:
+    name: str = "topk_ef"
+    k_ratio: float = 0.01          # paper uses top-1% (k = 0.01 d)
+    # block granularity: the sharded impl selects kb=ceil(k_ratio*block) per
+    # block via iterative argmax, so smaller blocks keep the iteration count
+    # low (256 -> kb=3 at 1%); the flat impls use bigger blocks.
+    block_size: int = 256
+    # "sharded": shard-aligned blocked top-k on the leaf's natural layout —
+    #            zero resharding, the production default (DESIGN.md §2).
+    # "exact"/"block": flat-vector operators (paper-exact; small models).
+    # "kernel": flat blocked top-k through the fused Pallas kernel.
+    topk_impl: str = "sharded"
+    bucket: str = "per_tensor"     # "per_tensor" | "global"
+    wire_dtype: str = "float32"    # payload value dtype on the wire
+    error_dtype: str = "float32"   # EF accumulator dtype
+    # Beyond-paper (EXPERIMENTS.md §Perf iter 5): block-LOCAL indices fit in
+    # u8/u16 for block_size <= 256/65536, shrinking payload wire bytes vs
+    # the flat operator's mandatory 32-bit global indices.
+    compact_indices: bool = False
+    qsgd_levels: int = 256         # QSGD quantization levels (8-bit default)
+
+    def leaf_k(self, size: int) -> int:
+        return max(1, int(round(self.k_ratio * size)))
+
+
+class CompressorDef(NamedTuple):
+    name: str
+    kind: str  # "sparse" | "dense"
+    init: Callable[[Tree], Tree]
+    # compress(state, g_tree, key) -> (payload_tree, candidate_state)
+    compress: Callable[[Tree, Tree, Optional[jax.Array]], tuple[Any, Tree]]
+    # static bit accounting per upload, from a template (abstract ok) tree
+    bits_paper: Callable[[Tree], float]
+    bits_wire: Callable[[Tree], float]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _leaf_topk(cfg: CompressorConfig, flat: jax.Array) -> topk_lib.SparsePayload:
+    k = cfg.leaf_k(flat.size)
+    if cfg.topk_impl == "exact":
+        return topk_lib.exact_topk(flat, k)
+    elif cfg.topk_impl == "block":
+        return topk_lib.block_topk(flat, k, cfg.block_size)
+    elif cfg.topk_impl == "kernel":
+        from repro.kernels.topk_ef import ops as kops  # lazy: optional dep
+
+        return kops.block_topk(flat, k, cfg.block_size)
+    raise ValueError(f"unknown topk_impl {cfg.topk_impl!r}")
+
+
+def _maybe_global(cfg: CompressorConfig, tree: Tree) -> Tree:
+    """Collapse the tree into a single flat pseudo-leaf in global mode."""
+    if cfg.bucket == "global":
+        return {"__global__": tree_flatten_concat(tree)}
+    return tree
+
+
+def _unglobal(cfg: CompressorConfig, tree: Tree, like: Tree) -> Tree:
+    if cfg.bucket == "global":
+        return tree_unflatten_concat(tree["__global__"], like)
+    return tree
+
+
+def _total_k(cfg: CompressorConfig, template: Tree) -> int:
+    if cfg.bucket == "global":
+        d = tree_size(template)
+        if cfg.topk_impl == "block":
+            nb = ceil_div(d, cfg.block_size)
+            return nb * max(1, ceil_div(cfg.leaf_k(d), nb))
+        return cfg.leaf_k(d)
+    total = 0
+    for x in jax.tree.leaves(template):
+        k = cfg.leaf_k(x.size)
+        if cfg.topk_impl in ("block", "kernel"):
+            nb = ceil_div(x.size, cfg.block_size)
+            k = nb * min(max(1, ceil_div(k, nb)), cfg.block_size)
+        total += min(k, x.size)
+    return total
+
+
+def _dtype_bits(name: str) -> int:
+    return jnp.dtype(name).itemsize * 8
+
+
+# ---------------------------------------------------------------------------
+# identity (SGD / LASG transport)
+# ---------------------------------------------------------------------------
+
+def make_identity(cfg: CompressorConfig) -> CompressorDef:
+    def init(tree):
+        return ()
+
+    def compress(state, g, key):
+        return g, state
+
+    def bits(template):
+        return 32.0 * tree_size(template)
+
+    return CompressorDef("identity", "dense", init, compress, bits, bits)
+
+
+# ---------------------------------------------------------------------------
+# top-k with error feedback (the paper's operator)
+# ---------------------------------------------------------------------------
+
+def _is_spec(s) -> bool:
+    from jax.sharding import PartitionSpec
+
+    return s is None or isinstance(s, PartitionSpec)
+
+
+def _sharded_axis_of(spec, shape, axis_sizes) -> tuple:
+    """(axis_index_or_None, axis_size) of the last mesh-sharded leaf dim."""
+    if spec is None:
+        return None, 1
+    found, size = None, 1
+    for i, entry in enumerate(tuple(spec)[: len(shape)]):
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        s = 1
+        for n in names:
+            s *= axis_sizes.get(n, 1)
+        if s > 1:
+            found, size = i, s
+    return found, size
+
+
+def _blocked_kb(cfg: CompressorConfig, shape: tuple, blocked: tuple) -> int:
+    size = 1
+    for d in shape:
+        size *= d
+    k = cfg.leaf_k(size)
+    nblocks = size // blocked[-1]
+    return min(max(1, -(-k // nblocks)), blocked[-1])
+
+
+def make_topk_ef(cfg: CompressorConfig, leaf_specs=None, axis_sizes=None) -> CompressorDef:
+    edtype = jnp.dtype(cfg.error_dtype)
+    axis_sizes = axis_sizes or {}
+    sharded = cfg.topk_impl == "sharded" and cfg.bucket != "global"
+
+    def init(tree):
+        return tree_zeros_like(_maybe_global(cfg, tree), dtype=edtype)
+
+    def _idx_dtype(bc: int):
+        if not cfg.compact_indices:
+            return jnp.int32
+        if bc <= 256:
+            return jnp.uint8
+        if bc <= 65536:
+            return jnp.uint16
+        return jnp.int32
+
+    def _leaf_sharded(e, x, spec):
+        ax, axsz = _sharded_axis_of(spec, x.shape, axis_sizes)
+        blocked = topk_lib.blocked_view_shape(x.shape, ax, cfg.block_size, axsz)
+        kb = _blocked_kb(cfg, x.shape, blocked)
+        g = (x.astype(edtype) + e).reshape(blocked)
+        p = topk_lib.blocked_topk(g, kb)
+        new_e = (g - topk_lib._scatter_last(
+            p.values.astype(edtype), p.indices, blocked[-1]
+        )).reshape(e.shape)
+        p = topk_lib.BlockPayload(
+            p.values.astype(jnp.dtype(cfg.wire_dtype)),
+            p.indices.astype(_idx_dtype(blocked[-1])),
+            blocked, x.shape,
+        )
+        return p, new_e
+
+    def _leaf_flat(e, x):
+        flat = x.reshape(-1).astype(edtype) + e.reshape(-1)
+        p = _leaf_topk(cfg, flat)
+        new_e = (flat - p.densify()).reshape(e.shape)
+        wire = p.values.astype(jnp.dtype(cfg.wire_dtype))
+        return topk_lib.SparsePayload(wire, p.indices, p.size), new_e
+
+    def compress(err, g, key):
+        g = _maybe_global(cfg, g)
+        flat_leaves, treedef = jax.tree.flatten(g)
+        err_leaves = jax.tree.leaves(err)
+        if sharded:
+            spec_leaves = (
+                jax.tree.leaves(leaf_specs, is_leaf=_is_spec)
+                if leaf_specs is not None else [None] * len(flat_leaves)
+            )
+            if len(spec_leaves) != len(flat_leaves):
+                spec_leaves = [None] * len(flat_leaves)
+            pairs = [
+                _leaf_sharded(e, x, s)
+                for e, x, s in zip(err_leaves, flat_leaves, spec_leaves)
+            ]
+        else:
+            pairs = [leaf for leaf in map(_leaf_flat, err_leaves, flat_leaves)]
+        payload = jax.tree.unflatten(treedef, [p for p, _ in pairs])
+        new_err = jax.tree.unflatten(treedef, [e for _, e in pairs])
+        return payload, new_err
+
+    def _total_k_eff(template):
+        if not sharded:
+            return _total_k(cfg, template)
+        total = 0
+        spec_leaves = (
+            jax.tree.leaves(leaf_specs, is_leaf=_is_spec)
+            if leaf_specs is not None else None
+        )
+        leaves = jax.tree.leaves(template)
+        if spec_leaves is None or len(spec_leaves) != len(leaves):
+            spec_leaves = [None] * len(leaves)
+        for x, s in zip(leaves, spec_leaves):
+            ax, axsz = _sharded_axis_of(s, x.shape, axis_sizes)
+            blocked = topk_lib.blocked_view_shape(x.shape, ax, cfg.block_size, axsz)
+            kb = _blocked_kb(cfg, x.shape, blocked)
+            total += (x.size // blocked[-1]) * kb
+        return total
+
+    def bits_paper(template):
+        return 32.0 * _total_k_eff(template)
+
+    def bits_wire(template):
+        vb = _dtype_bits(cfg.wire_dtype)
+        if not sharded:
+            return float(vb + 32) * _total_k_eff(template)
+        spec_leaves = (
+            jax.tree.leaves(leaf_specs, is_leaf=_is_spec)
+            if leaf_specs is not None else None
+        )
+        leaves = jax.tree.leaves(template)
+        if spec_leaves is None or len(spec_leaves) != len(leaves):
+            spec_leaves = [None] * len(leaves)
+        total = 0.0
+        for x, s in zip(leaves, spec_leaves):
+            ax, axsz = _sharded_axis_of(s, x.shape, axis_sizes)
+            blocked = topk_lib.blocked_view_shape(x.shape, ax, cfg.block_size, axsz)
+            kb = _blocked_kb(cfg, x.shape, blocked)
+            k_eff = (x.size // blocked[-1]) * kb
+            ib = jnp.dtype(_idx_dtype(blocked[-1])).itemsize * 8
+            total += float(vb + ib) * k_eff
+        return total
+
+    return CompressorDef("topk_ef", "sparse", init, compress, bits_paper, bits_wire)
+
+
+# ---------------------------------------------------------------------------
+# random-k (unbiased, no EF needed)
+# ---------------------------------------------------------------------------
+
+def make_randk(cfg: CompressorConfig) -> CompressorDef:
+    def init(tree):
+        return ()
+
+    def compress(state, g, key):
+        assert key is not None, "randk requires a PRNG key"
+        g = _maybe_global(cfg, g)
+        leaves, treedef = jax.tree.flatten(g)
+        keys = jax.random.split(key, len(leaves))
+        payload = [
+            topk_lib.random_k(x.reshape(-1).astype(jnp.float32), cfg.leaf_k(x.size), k)
+            for x, k in zip(leaves, keys)
+        ]
+        return jax.tree.unflatten(treedef, payload), state
+
+    def bits_paper(template):
+        if cfg.bucket == "global":
+            return 32.0 * cfg.leaf_k(tree_size(template))
+        return 32.0 * sum(cfg.leaf_k(x.size) for x in jax.tree.leaves(template))
+
+    def bits_wire(template):
+        return 2.0 * bits_paper(template)
+
+    return CompressorDef("randk", "sparse", init, compress, bits_paper, bits_wire)
+
+
+# ---------------------------------------------------------------------------
+# QSGD stochastic quantization (dense transport of dequantized values)
+# ---------------------------------------------------------------------------
+
+def make_qsgd(cfg: CompressorConfig) -> CompressorDef:
+    s = cfg.qsgd_levels
+
+    def init(tree):
+        return ()
+
+    def compress(state, g, key):
+        assert key is not None, "qsgd requires a PRNG key"
+        leaves, treedef = jax.tree.flatten(g)
+        keys = jax.random.split(key, len(leaves))
+
+        def leaf(x, k):
+            x32 = x.astype(jnp.float32)
+            nrm = jnp.linalg.norm(x32.reshape(-1)) + 1e-12
+            level = jnp.abs(x32) / nrm * s
+            low = jnp.floor(level)
+            prob = level - low
+            rnd = jax.random.uniform(k, x.shape)
+            q = (low + (rnd < prob)) / s
+            return (jnp.sign(x32) * nrm * q).astype(x.dtype)
+
+        out = [leaf(x, k) for x, k in zip(leaves, keys)]
+        return jax.tree.unflatten(treedef, out), state
+
+    def bits(template):
+        d = tree_size(template)
+        n_leaves = len(jax.tree.leaves(template))
+        return (math.log2(s) + 1.0) * d + 32.0 * n_leaves
+
+    return CompressorDef("qsgd", "dense", init, compress, bits, bits)
+
+
+# ---------------------------------------------------------------------------
+# signSGD with error feedback (1 bit + per-leaf scale)
+# ---------------------------------------------------------------------------
+
+def make_signsgd_ef(cfg: CompressorConfig) -> CompressorDef:
+    edtype = jnp.dtype(cfg.error_dtype)
+
+    def init(tree):
+        return tree_zeros_like(tree, dtype=edtype)
+
+    def compress(err, g, key):
+        def leaf(e, x):
+            corr = x.astype(edtype) + e
+            scale = jnp.mean(jnp.abs(corr))
+            q = jnp.sign(corr) * scale
+            return q.astype(x.dtype), corr - q
+
+        g_leaves, treedef = jax.tree.flatten(g)
+        pairs = [leaf(e, x) for e, x in zip(jax.tree.leaves(err), g_leaves)]
+        payload = jax.tree.unflatten(treedef, [p for p, _ in pairs])
+        new_err = jax.tree.unflatten(treedef, [e for _, e in pairs])
+        return payload, new_err
+
+    def bits(template):
+        d = tree_size(template)
+        n_leaves = len(jax.tree.leaves(template))
+        return 1.0 * d + 32.0 * n_leaves
+
+    return CompressorDef("signsgd_ef", "dense", init, compress, bits, bits)
+
+
+# ---------------------------------------------------------------------------
+# TernGrad ternary stochastic quantization
+# ---------------------------------------------------------------------------
+
+def make_terngrad(cfg: CompressorConfig) -> CompressorDef:
+    def init(tree):
+        return ()
+
+    def compress(state, g, key):
+        assert key is not None, "terngrad requires a PRNG key"
+        leaves, treedef = jax.tree.flatten(g)
+        keys = jax.random.split(key, len(leaves))
+
+        def leaf(x, k):
+            x32 = x.astype(jnp.float32)
+            s = jnp.max(jnp.abs(x32)) + 1e-12
+            prob = jnp.abs(x32) / s
+            rnd = jax.random.uniform(k, x.shape)
+            t = jnp.sign(x32) * (rnd < prob)
+            return (s * t).astype(x.dtype)
+
+        out = [leaf(x, k) for x, k in zip(leaves, keys)]
+        return jax.tree.unflatten(treedef, out), state
+
+    def bits(template):
+        d = tree_size(template)
+        n_leaves = len(jax.tree.leaves(template))
+        return math.log2(3.0) * d + 32.0 * n_leaves
+
+    return CompressorDef("terngrad", "dense", init, compress, bits, bits)
+
+
+_REGISTRY = {
+    "identity": make_identity,
+    "topk_ef": make_topk_ef,
+    "randk": make_randk,
+    "qsgd": make_qsgd,
+    "signsgd_ef": make_signsgd_ef,
+    "terngrad": make_terngrad,
+}
+
+
+def build_compressor(cfg: CompressorConfig, leaf_specs=None, axis_sizes=None) -> CompressorDef:
+    if cfg.name not in _REGISTRY:
+        raise ValueError(f"unknown compressor {cfg.name!r}; have {sorted(_REGISTRY)}")
+    if cfg.name == "topk_ef":
+        return make_topk_ef(cfg, leaf_specs=leaf_specs, axis_sizes=axis_sizes)
+    return _REGISTRY[cfg.name](cfg)

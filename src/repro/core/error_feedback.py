@@ -1,0 +1,54 @@
+"""Standalone error-feedback (memory) transform.
+
+The paper's EF is built into ``compressors.make_topk_ef`` (the compressor owns
+its residual so the send/skip branch can commit or discard it atomically).
+This module additionally exposes EF as a generic wrapper usable around *any*
+compression function — the classic Stich et al. (2018) / Karimireddy et al.
+(2019) formulation — for composition experiments and property tests:
+
+    e_{t+1} = (g_t + e_t) - C(g_t + e_t)
+
+Invariant (tested with hypothesis): compressed + residual == corrected input,
+exactly, for any deterministic C that returns a subset/projection of its
+input.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import Tree, tree_zeros_like
+
+
+class EFState(NamedTuple):
+    error: Tree
+
+
+def ef_init(template: Tree, dtype=jnp.float32) -> EFState:
+    return EFState(error=tree_zeros_like(template, dtype=dtype))
+
+
+def ef_apply(
+    state: EFState,
+    g: Tree,
+    compress_fn: Callable[[jax.Array], jax.Array],
+) -> tuple[Tree, EFState]:
+    """Apply C to the error-corrected gradient; return (compressed, state').
+
+    ``compress_fn`` maps a flat fp32 vector to its compressed *dense*
+    representation (e.g. densified top-k). Residual accumulates in fp32.
+    """
+
+    def leaf(e, x):
+        corrected = x.astype(e.dtype).reshape(-1) + e.reshape(-1)
+        out = compress_fn(corrected)
+        new_e = (corrected - out).reshape(e.shape)
+        return out.reshape(x.shape).astype(x.dtype), new_e
+
+    g_leaves, treedef = jax.tree.flatten(g)
+    pairs = [leaf(e, x) for e, x in zip(jax.tree.leaves(state.error), g_leaves)]
+    compressed = jax.tree.unflatten(treedef, [c for c, _ in pairs])
+    new_state = EFState(error=jax.tree.unflatten(treedef, [e for _, e in pairs]))
+    return compressed, new_state

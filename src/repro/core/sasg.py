@@ -1,0 +1,316 @@
+"""SASG: the paper's algorithm as a composable gradient-exchange transform.
+
+One engine expresses all four paper algorithms (Section 5.1) plus the extra
+baselines, by composing two orthogonal switches:
+
+                     selection OFF            selection ON
+  identity           distributed SGD          LASG
+  topk_ef            Sparse (top-k + EF)      SASG   <- the paper
+  (randk/qsgd/...)   extra baselines          adaptive variants (beyond paper)
+
+The exchange runs inside a partial-auto ``jax.shard_map``: worker axes
+(pod/data) are manual, the model axis stays auto so TP sharding composes
+transparently. Each worker:
+
+  1. computes its fresh local gradient (and, if selection is on, the
+     auxiliary gradient at its stale parameters **on the same minibatch** —
+     the paper's variance-cancelling trick, eq. 6/7);
+  2. decides send-vs-skip with the LASG rule (worker-local, zero comms);
+  3. folds the learning rate and error feedback: g = lr * grad + e  (eq. 8);
+  4. compresses (top-k -> fixed-k values+indices payload);
+  5. contributes either the fresh payload or its cached stale payload to the
+     worker-axis exchange (all-gather + local densify for sparse; psum for
+     dense). Re-sending the cached payload is wire-identical to the paper's
+     server-side reuse: the "server memory" is distributed across workers,
+     and each worker's cache is exactly the sparse contribution the paper's
+     server would have stored (DESIGN.md §2).
+
+The returned ``update`` equals eq. (8)'s (1/M) [sum fresh T_k(g) + sum stale
+T_k(g)] — identically replicated across workers, ready for `params - update`
+(paper mode, fold_lr=True) or for a downstream optimizer (fold_lr=False,
+beyond-paper composition e.g. with Adam, cf. CADA).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import comm
+from .compressors import CompressorConfig, CompressorDef, build_compressor
+from .selection import (
+    SelectionConfig,
+    SelectionState,
+    advance_tau,
+    init_selection,
+    push_window,
+    resolve_alphas,
+    should_send,
+)
+from .types import Tree, tree_cast, tree_scale, tree_sq_norm, tree_where, tree_zeros_like
+
+
+@dataclass(frozen=True)
+class SASGConfig:
+    compressor: CompressorConfig = field(default_factory=CompressorConfig)
+    selection: SelectionConfig = field(default_factory=SelectionConfig)
+    mode: str = "flat"                    # "flat" | "hierarchical" (pod = worker)
+    fold_lr: bool = True                  # paper folds gamma into the compressed g
+    stale_params_dtype: str = "float32"   # bf16 = beyond-paper memory saving
+    name: str = "sasg"
+
+
+# -- presets: the paper's four algorithms -----------------------------------
+
+def sgd_config(**kw) -> SASGConfig:
+    return SASGConfig(
+        compressor=CompressorConfig(name="identity"),
+        selection=SelectionConfig(enabled=False),
+        name="sgd", **kw,
+    )
+
+
+def sparse_config(k_ratio: float = 0.01, **kw) -> SASGConfig:
+    return SASGConfig(
+        compressor=CompressorConfig(name="topk_ef", k_ratio=k_ratio),
+        selection=SelectionConfig(enabled=False),
+        name="sparse", **kw,
+    )
+
+
+def lasg_config(max_delay: int = 10, **kw) -> SASGConfig:
+    return SASGConfig(
+        compressor=CompressorConfig(name="identity"),
+        selection=SelectionConfig(enabled=True, max_delay=max_delay),
+        name="lasg", **kw,
+    )
+
+
+def sasg_config(k_ratio: float = 0.01, max_delay: int = 10, **kw) -> SASGConfig:
+    return SASGConfig(
+        compressor=CompressorConfig(name="topk_ef", k_ratio=k_ratio),
+        selection=SelectionConfig(enabled=True, max_delay=max_delay),
+        name="sasg", **kw,
+    )
+
+
+PRESETS = {
+    "sgd": sgd_config,
+    "sparse": sparse_config,
+    "lasg": lasg_config,
+    "sasg": sasg_config,
+}
+
+
+class WorkerState(NamedTuple):
+    """Per-worker (device-varying over worker axes) SASG state."""
+
+    comp_state: Tree        # compressor state (EF error buffers)
+    stale_cache: Tree       # last-sent payload (the distributed "server memory")
+    stale_params: Tree      # w^{t - tau_m}; () when selection is off
+    tau: jax.Array          # () int32
+
+
+class GlobalState(NamedTuple):
+    """Replicated SASG state."""
+
+    window: jax.Array       # (D,) ||w^{t+1-d} - w^{t-d}||^2
+    step: jax.Array         # () int32
+
+
+class ExchangeInfo(NamedTuple):
+    loss: jax.Array          # () f32   — this worker's fresh minibatch loss
+    send: jax.Array          # () bool  — this worker uploaded
+    num_sent: jax.Array      # () f32   — |M^t| across all workers
+    rule_lhs: jax.Array      # selection diagnostics (0 when selection off)
+    rule_rhs: jax.Array
+
+
+class SASGExchange(NamedTuple):
+    """Built exchange: functions to be called from the training step."""
+
+    config: SASGConfig
+    compressor: CompressorDef
+    num_workers: int
+    worker_axes: tuple
+    reduce_axes: tuple
+    init_worker: Callable[[Tree], WorkerState]
+    init_global: Callable[[], GlobalState]
+    # run(params, batch, wstate, gstate, lr, key, grad_fn) -> (update, wstate, info)
+    run: Callable[..., tuple]
+    bits_per_upload_paper: Callable[[Tree], float]
+    bits_per_upload_wire: Callable[[Tree], float]
+
+
+def _zero_payload(compressor: CompressorDef, cfg: SASGConfig, params: Tree) -> Tree:
+    """Payload-shaped zeros: compress a zero tree (values come out zero)."""
+    zeros = tree_zeros_like(params, dtype=jnp.float32)
+    state = compressor.init(zeros)
+    key = jax.random.PRNGKey(0)
+    payload, _ = compressor.compress(state, zeros, key)
+    return payload
+
+
+def build_exchange(
+    cfg: SASGConfig,
+    worker_axes: Sequence[str],
+    reduce_axes: Sequence[str] = (),
+    num_workers: int = 1,
+    leaf_specs=None,
+    axis_sizes=None,
+) -> SASGExchange:
+    compressor = build_compressor(
+        cfg.compressor, leaf_specs=leaf_specs, axis_sizes=axis_sizes
+    )
+    sel = cfg.selection
+    worker_axes = tuple(worker_axes)
+    reduce_axes = tuple(reduce_axes)
+
+    def init_worker(params: Tree) -> WorkerState:
+        comp_state = compressor.init(params)
+        stale_cache = _zero_payload(compressor, cfg, params)
+        if sel.enabled:
+            stale_params = tree_cast(params, jnp.dtype(cfg.stale_params_dtype))
+        else:
+            stale_params = ()
+        return WorkerState(comp_state, stale_cache, stale_params, jnp.ones((), jnp.int32))
+
+    def init_global() -> GlobalState:
+        return GlobalState(
+            window=jnp.zeros((max(sel.max_delay, 1),), jnp.float32),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def _reduce(tree: Tree) -> Tree:
+        if not reduce_axes:
+            return tree
+        return jax.tree.map(lambda x: jax.lax.pmean(x, reduce_axes), tree)
+
+    def run(
+        params: Tree,
+        batch: Tree,
+        wstate: WorkerState,
+        gstate: GlobalState,
+        lr: jax.Array,
+        key: jax.Array,
+        grad_fn: Callable[[Tree, Tree], tuple],
+        force_skip: Optional[jax.Array] = None,
+    ):
+        """One SASG exchange. Called inside shard_map (manual worker axes).
+
+        ``grad_fn(params, batch) -> (loss, grads)`` (i.e. value_and_grad)."""
+        loss, g_fresh = grad_fn(params, batch)
+        g_fresh = _reduce(g_fresh)
+        if reduce_axes:
+            loss = jax.lax.pmean(loss, reduce_axes)
+
+        if sel.enabled:
+            stale_p = jax.tree.map(
+                lambda s, p: s.astype(p.dtype), wstate.stale_params, params
+            )
+            if sel.probe_fraction < 1.0:
+                # rule (6) on a probe sub-batch: both sides re-evaluated on
+                # the same probe data (the variance-cancelling pairing is
+                # preserved); costs 2*p extra grads instead of 1x.
+                def probe(x):
+                    n = max(1, int(round(sel.probe_fraction * x.shape[0])))
+                    return x[:n]
+
+                pbatch = jax.tree.map(probe, batch)
+                g_rule_fresh = _reduce(grad_fn(params, pbatch)[1])
+                g_stale = _reduce(grad_fn(stale_p, pbatch)[1])
+            else:
+                g_rule_fresh = g_fresh
+                g_stale = _reduce(grad_fn(stale_p, batch)[1])
+            # alpha_d defaults to alpha_scale/lr (paper grid); lr is traced, so
+            # compute rhs directly here.
+            if sel.alphas is not None:
+                a = jnp.asarray(sel.alphas, jnp.float32)
+            else:
+                a = sel.alpha_scale / jnp.maximum(lr, 1e-12)
+                a = jnp.broadcast_to(a, (sel.max_delay,)).astype(jnp.float32)
+            sstate = SelectionState(tau=wstate.tau, window=gstate.window)
+            send = should_send(
+                sel, g_rule_fresh, g_stale, sstate, a, num_workers, force_skip
+            )
+            lhs = tree_sq_norm(jax.tree.map(jnp.subtract, g_rule_fresh, g_stale))
+            rhs = jnp.sum(a * gstate.window) / float(num_workers) ** 2
+        else:
+            send = jnp.ones((), bool)
+            lhs = jnp.zeros(())
+            rhs = jnp.zeros(())
+
+        # Always upload on the very first step (empty caches).
+        send = send | (gstate.step == 0)
+
+        # Paper eq. (8): g_m^t = gamma * grad + e_m^t (error folded inside the
+        # compressor; gamma folded here when fold_lr).
+        g = tree_scale(g_fresh, lr) if cfg.fold_lr else g_fresh
+        payload_fresh, comp_state_cand = compressor.compress(wstate.comp_state, g, key)
+
+        payload = tree_where(send, payload_fresh, wstate.stale_cache)
+        comp_state_new = tree_where(send, comp_state_cand, wstate.comp_state)
+
+        mean_contrib = comm.exchange(payload, compressor.kind, worker_axes, num_workers)
+        if compressor.kind == "sparse":
+            if cfg.compressor.bucket == "global":
+                from .types import tree_unflatten_concat
+
+                update = tree_unflatten_concat(mean_contrib["__global__"], params)
+                update = tree_cast(update, jnp.float32)
+            elif cfg.compressor.topk_impl == "sharded":
+                # BlockPayload densify already restored leaf shapes
+                update = tree_cast(mean_contrib, jnp.float32)
+            else:
+                update = comm.reshape_like(mean_contrib, tree_cast(params, jnp.float32))
+        else:
+            update = mean_contrib
+
+        if sel.enabled:
+            stale_params_new = tree_where(
+                send,
+                tree_cast(params, jnp.dtype(cfg.stale_params_dtype)),
+                wstate.stale_params,
+            )
+        else:
+            stale_params_new = ()
+
+        new_wstate = WorkerState(
+            comp_state=comp_state_new,
+            stale_cache=payload,
+            stale_params=stale_params_new,
+            tau=advance_tau(SelectionState(wstate.tau, gstate.window), send),
+        )
+        # send is identical within a reduce group (g_fresh was pmean'd over
+        # reduce_axes), so summing over worker axes alone counts |M^t|.
+        num_sent = jax.lax.psum(send.astype(jnp.float32), worker_axes)
+        info = ExchangeInfo(
+            loss=loss, send=send, num_sent=num_sent, rule_lhs=lhs, rule_rhs=rhs
+        )
+        return update, new_wstate, info
+
+    return SASGExchange(
+        config=cfg,
+        compressor=compressor,
+        num_workers=num_workers,
+        worker_axes=worker_axes,
+        reduce_axes=reduce_axes,
+        init_worker=init_worker,
+        init_global=init_global,
+        run=run,
+        bits_per_upload_paper=compressor.bits_paper,
+        bits_per_upload_wire=compressor.bits_wire,
+    )
+
+
+def update_global_state(
+    gstate: GlobalState, applied_delta_sq_norm: jax.Array
+) -> GlobalState:
+    """Push ||w^{t+1} - w^t||^2 into the window and advance the step."""
+    sstate = SelectionState(tau=jnp.zeros((), jnp.int32), window=gstate.window)
+    return GlobalState(
+        window=push_window(sstate, applied_delta_sq_norm),
+        step=gstate.step + 1,
+    )

@@ -1,0 +1,96 @@
+"""Adaptive aggregation: the LASG-style selection rule used by SASG (eq. 6).
+
+Worker m uploads at step t iff
+
+    || grad(w^t; xi_t) - grad(w^{t-tau_m}; xi_t) ||^2
+        >  (1/M^2) * sum_{d=1..D} alpha_d * || w^{t+1-d} - w^{t-d} ||^2
+
+or its staleness hit the cap (tau_m >= D). Crucially both gradients are
+evaluated on the *same* minibatch xi_t (paper Section 3.2): this cancels the
+non-diminishing stochastic-variance term that breaks the plain LAG rule in
+stochastic settings.
+
+The squared-parameter-difference window is a replicated (D,) vector pushed
+once per global step; evaluating the rule is entirely worker-local (DESIGN.md
+§2), so adaptivity costs zero extra communication.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .types import Tree, tree_sq_norm, tree_sub
+
+
+@dataclass(frozen=True)
+class SelectionConfig:
+    enabled: bool = True
+    max_delay: int = 10                      # D (paper uses D=10)
+    # alpha_d weights; if None, alpha_d = alpha_scale / lr at build time as in
+    # the paper's experiments (alpha_d = 1/gamma or 1/(2 gamma)).
+    alphas: Optional[Sequence[float]] = None
+    alpha_scale: float = 1.0                 # alpha_d = alpha_scale / lr
+    # Beyond-paper: probabilistic deadline skip for straggler mitigation; a
+    # worker whose (simulated or measured) step time exceeds the deadline is
+    # forced into the skip branch, which is exactly the algorithm's M_c path.
+    deadline_skip: bool = False
+    # Beyond-paper (EXPERIMENTS.md §Perf iter 4): evaluate rule (6) on a
+    # probe sub-batch instead of the full minibatch. The paper's rule costs a
+    # full auxiliary forward+backward (2x step compute AND 2x TP collective
+    # traffic); probing at fraction p costs 2p extra instead of 1x. The
+    # staleness cap D still bounds the worst case, so Theorem 1's D-bounded
+    # delay analysis is unaffected; only the rule's variance grows.
+    probe_fraction: float = 1.0
+
+
+class SelectionState(NamedTuple):
+    tau: jax.Array        # () int32, worker-local staleness counter
+    window: jax.Array     # (D,) f32, replicated ||w^{t+1-d} - w^{t-d}||^2
+
+
+def init_selection(cfg: SelectionConfig) -> SelectionState:
+    return SelectionState(
+        tau=jnp.ones((), jnp.int32),
+        window=jnp.zeros((max(cfg.max_delay, 1),), jnp.float32),
+    )
+
+
+def resolve_alphas(cfg: SelectionConfig, lr: float) -> jax.Array:
+    if cfg.alphas is not None:
+        a = jnp.asarray(cfg.alphas, jnp.float32)
+        assert a.shape == (cfg.max_delay,)
+        return a
+    return jnp.full((cfg.max_delay,), cfg.alpha_scale / max(lr, 1e-12), jnp.float32)
+
+
+def should_send(
+    cfg: SelectionConfig,
+    g_fresh: Tree,
+    g_stale: Tree,
+    state: SelectionState,
+    alphas: jax.Array,
+    num_workers: int,
+    force_skip: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Evaluate rule (6); returns a scalar bool (True => upload fresh grad)."""
+    lhs = tree_sq_norm(tree_sub(g_fresh, g_stale))
+    rhs = jnp.sum(alphas * state.window) / float(num_workers) ** 2
+    send = (lhs > rhs) | (state.tau >= cfg.max_delay)
+    if force_skip is not None:
+        # Straggler deadline: force the skip branch unless staleness capped.
+        send = jnp.where(force_skip & (state.tau < cfg.max_delay), False, send)
+    return send
+
+
+def advance_tau(state: SelectionState, send: jax.Array) -> jax.Array:
+    return jnp.where(send, jnp.ones_like(state.tau), state.tau + 1)
+
+
+def push_window(state: SelectionState, update_sq_norm: jax.Array) -> jax.Array:
+    """Shift in ||w^{t+1} - w^t||^2 as the newest window entry (d=1)."""
+    return jnp.concatenate(
+        [update_sq_norm.reshape(1).astype(jnp.float32), state.window[:-1]]
+    )

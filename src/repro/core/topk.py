@@ -1,0 +1,253 @@
+"""Top-k sparsification operators (paper Definition 1).
+
+Three granularities, all of which are delta-approximate compressors in the
+sense of Lemma 1 (with delta = k/d for the exact operator and
+delta = k_block/block for the block variant, both >= k/d overall):
+
+- ``exact_topk``:   exact global top-k over a flat vector (the paper's T_k).
+- ``block_topk``:   split the flat vector into fixed-size blocks and keep the
+                    top k_b of each block. TPU-native: each block's selection
+                    is a local ``lax.top_k`` over the last axis, so a
+                    model-axis-sharded leading dim stays fully local (no
+                    cross-shard gather). This is the semantic implemented by
+                    the Pallas kernel in ``repro.kernels.block_topk``.
+- per-tensor:       driven by the caller (each pytree leaf compressed
+                    independently); see ``compressors.py``.
+
+All operators return fixed-shape ``(values, indices)`` payloads — XLA needs
+static shapes, and fixed-k payloads are exactly what makes the sparse
+all-gather exchange shape-static (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import ceil_div, pad_to_multiple
+
+
+@jax.tree_util.register_pytree_node_class
+class SparsePayload:
+    """Fixed-size sparse representation of a flat vector.
+
+    values:  (k,) float    selected coordinates (zero for padding slots)
+    indices: (k,) int32    flat positions of the selected coordinates
+    size:    static int    logical dense length d (aux data, never traced)
+    """
+
+    __slots__ = ("values", "indices", "size")
+
+    def __init__(self, values, indices, size: int):
+        self.values = values
+        self.indices = indices
+        self.size = size
+
+    def tree_flatten(self):
+        return (self.values, self.indices), self.size
+
+    @classmethod
+    def tree_unflatten(cls, size, children):
+        return cls(children[0], children[1], size)
+
+    def densify(self) -> jax.Array:
+        """Scatter the payload back to a dense flat vector."""
+        out = jnp.zeros((self.size,), self.values.dtype)
+        return out.at[self.indices].add(self.values, mode="drop")
+
+    def __repr__(self):
+        return f"SparsePayload(k={getattr(self.values, 'shape', '?')}, d={self.size})"
+
+
+def exact_topk(x: jax.Array, k: int) -> SparsePayload:
+    """Exact global top-k by absolute value over a flat vector."""
+    assert x.ndim == 1, "exact_topk expects a flat vector"
+    k = int(min(k, x.size))
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    vals = x[idx]
+    return SparsePayload(values=vals, indices=idx.astype(jnp.int32), size=x.size)
+
+
+def block_topk(x: jax.Array, k: int, block_size: int = 2048) -> SparsePayload:
+    """Block-local top-k: keep ceil(k/nblocks) per block of ``block_size``.
+
+    The realized k may slightly exceed the requested k (per-block rounding);
+    the payload is still fixed-shape. Padding tail positions are masked to
+    -inf magnitude so they are never selected unless a block is all padding,
+    in which case the selected value is exactly 0 and densify is a no-op.
+    """
+    assert x.ndim == 1
+    d = x.size
+    xb = pad_to_multiple(x, block_size)
+    nb = xb.size // block_size
+    xb = xb.reshape(nb, block_size)
+    kb = max(1, ceil_div(int(min(k, d)), nb))
+    kb = min(kb, block_size)
+    mag = jnp.abs(xb)
+    # Mask padding tail of the last block so indices stay in-range.
+    pos = jnp.arange(nb * block_size).reshape(nb, block_size)
+    mag = jnp.where(pos < d, mag, -jnp.inf)
+    _, idx = jax.lax.top_k(mag, kb)  # (nb, kb) local indices
+    vals = jnp.take_along_axis(xb, idx, axis=1)
+    flat_idx = idx + (jnp.arange(nb) * block_size)[:, None]
+    # Out-of-range (padding) slots: zero value, clamp index (drop-safe anyway).
+    in_range = flat_idx < d
+    vals = jnp.where(in_range, vals, 0.0)
+    flat_idx = jnp.where(in_range, flat_idx, d - 1)
+    return SparsePayload(
+        values=vals.reshape(-1),
+        indices=flat_idx.reshape(-1).astype(jnp.int32),
+        size=d,
+    )
+
+
+def random_k(x: jax.Array, k: int, key: jax.Array) -> SparsePayload:
+    """Unbiased random-k sparsification: E[payload.densify()] == x.
+
+    Selected coordinates are scaled by d/k so the estimate is unbiased
+    (Wangni et al., 2018).
+    """
+    assert x.ndim == 1
+    d = x.size
+    k = int(min(k, d))
+    idx = jax.random.choice(key, d, shape=(k,), replace=False)
+    vals = x[idx] * (d / k)
+    return SparsePayload(values=vals, indices=idx.astype(jnp.int32), size=d)
+
+
+def payload_k(p: SparsePayload) -> int:
+    return int(p.values.shape[-1]) if p.values.ndim == 1 else int(p.values.size)
+
+
+# ---------------------------------------------------------------------------
+# shard-aligned block top-k (the production operator)
+# ---------------------------------------------------------------------------
+#
+# Flattening a TP-sharded gradient leaf to 1-D erases its sharding: XLA then
+# materializes the full leaf (fp32!) on every device, and the densify scatter
+# runs over the unsharded flat vector (measured: ~30 GB/device of compression
+# temps on llama3-8b train_4k — EXPERIMENTS.md §Perf iteration 1). Instead we
+# block the leaf IN ITS NATURAL LAYOUT, with block boundaries aligned to the
+# sharded axis, so top-k / EF residual / densify are all shard-local and only
+# the (values, local-indices) payloads ever cross the worker axis.
+
+
+@jax.tree_util.register_pytree_node_class
+class BlockPayload:
+    """Sparse payload over a blocked view of a (possibly sharded) leaf.
+
+    values / indices: (*lead, nbc, kb) — kb selected per (lead, block);
+    indices are LOCAL positions within the block (int32 < block_c).
+    aux: (blocked_shape, orig_shape) — blocked = (*lead, nbc, block_c).
+    """
+
+    __slots__ = ("values", "indices", "blocked_shape", "orig_shape")
+
+    def __init__(self, values, indices, blocked_shape, orig_shape):
+        self.values = values
+        self.indices = indices
+        self.blocked_shape = tuple(blocked_shape)
+        self.orig_shape = tuple(orig_shape)
+
+    def tree_flatten(self):
+        return (self.values, self.indices), (self.blocked_shape, self.orig_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+    def densify(self) -> jax.Array:
+        """Scatter back to the original leaf shape (shard-local scatter
+        along the last/block axis; all leading dims are batch dims)."""
+        dense = _scatter_last(self.values, self.indices, self.blocked_shape[-1])
+        return dense.reshape(self.orig_shape)
+
+    def __repr__(self):
+        return (f"BlockPayload(blocked={self.blocked_shape}, "
+                f"kb={self.values.shape[-1]})")
+
+
+def _scatter_last(vals: jax.Array, idx: jax.Array, block_c: int) -> jax.Array:
+    """Batched scatter-add along the last axis: (*B, kb) -> (*B, block_c)."""
+
+    def row(v, i):
+        return jnp.zeros((block_c,), v.dtype).at[i].add(v, mode="drop")
+
+    fn = row
+    for _ in range(vals.ndim - 1):
+        fn = jax.vmap(fn)
+    return fn(vals, idx)
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    cap = min(cap, n)
+    for b in range(cap, 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def blocked_view_shape(shape: tuple, sharded_axis: int | None,
+                       target_block: int, axis_size: int = 1) -> tuple:
+    """Choose the blocked view (*lead, nbc, block_c) for a leaf.
+
+    - sharded axis is LAST: subdivide it so nbc is a multiple of the axis
+      size (blocks never straddle shard boundaries).
+    - sharded axis is interior (or None): merge all trailing unsharded dims
+      into C and block that; the sharded axis stays a leading batch dim.
+    """
+    nd = len(shape)
+    if sharded_axis is not None and sharded_axis == nd - 1:
+        c_local = shape[-1] // max(axis_size, 1)
+        bc = _largest_divisor_leq(c_local, target_block)
+        nbc = shape[-1] // bc
+        return shape[:-1] + (nbc, bc)
+    cut = (sharded_axis + 1) if sharded_axis is not None else max(nd - 1, 1)
+    if cut >= nd:  # sharded axis is last but handled above; safeguard
+        cut = nd - 1
+    c = 1
+    for d in shape[cut:]:
+        c *= d
+    bc = _largest_divisor_leq(c, target_block)
+    nbc = c // bc
+    return shape[:cut] + (nbc, bc)
+
+
+def blocked_topk(x_blocked: jax.Array, kb: int) -> "BlockPayload":
+    """Top-kb by |x| within each block (last axis) via iterative masked
+    argmax. Deliberately NOT lax.top_k: XLA's sort partitioner all-gathers
+    sharded operands even when the sort dim is local (measured — see
+    EXPERIMENTS.md §Perf iteration 2), whereas max/where/iota reductions
+    partition cleanly. This is also bit-for-bit the algorithm of the fused
+    Pallas kernel (repro.kernels.topk_ef), which executes the whole loop in
+    one VMEM-resident HBM pass on real TPU hardware."""
+    x32 = x_blocked.astype(jnp.float32)
+    mag = jnp.abs(x32)
+    bc = x_blocked.shape[-1]
+    col = jax.lax.broadcasted_iota(jnp.int32, x_blocked.shape, x_blocked.ndim - 1)
+
+    def body(_, carry):
+        mag_c, vals, idxs, j = carry
+        mx = jnp.max(mag_c, axis=-1, keepdims=True)
+        first = jnp.min(
+            jnp.where(mag_c == mx, col, bc), axis=-1, keepdims=True
+        )
+        sel = col == first
+        v = jnp.sum(jnp.where(sel, x32, 0.0), axis=-1)
+        vals = jax.lax.dynamic_update_index_in_dim(vals, v, j, vals.ndim - 1)
+        idxs = jax.lax.dynamic_update_index_in_dim(
+            idxs, first[..., 0], j, idxs.ndim - 1
+        )
+        return jnp.where(sel, -jnp.inf, mag_c), vals, idxs, j + 1
+
+    vals0 = jnp.zeros(x_blocked.shape[:-1] + (kb,), jnp.float32)
+    idxs0 = jnp.zeros(x_blocked.shape[:-1] + (kb,), jnp.int32)
+    _, vals, idxs, _ = jax.lax.fori_loop(
+        0, kb, body, (mag, vals0, idxs0, jnp.zeros((), jnp.int32))
+    )
+    return BlockPayload(
+        values=vals, indices=idxs,
+        blocked_shape=x_blocked.shape,
+        orig_shape=x_blocked.shape,  # caller overwrites with the leaf shape
+    )

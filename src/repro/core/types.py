@@ -1,0 +1,131 @@
+"""Shared pytree / numeric utilities for the SASG core.
+
+Everything here is jit-safe, shape-static, and free of device-state side
+effects. Trees are arbitrary pytrees of jnp arrays (model gradients,
+parameters, error buffers, ...).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any  # pytree of arrays
+
+
+def tree_map(f: Callable, *trees: Tree) -> Tree:
+    return jax.tree.map(f, *trees)
+
+
+def tree_add(a: Tree, b: Tree) -> Tree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Tree, b: Tree) -> Tree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: Tree, s) -> Tree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a: Tree, dtype=None) -> Tree:
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), a)
+
+
+def tree_where(pred, a: Tree, b: Tree) -> Tree:
+    """Select between two trees on a scalar boolean predicate."""
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y.astype(x.dtype)), a, b)
+
+
+def tree_sq_norm(a: Tree) -> jax.Array:
+    """Global squared l2 norm of a tree, accumulated in fp32."""
+    leaves = jax.tree.leaves(a)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+
+
+def tree_size(a: Tree) -> int:
+    """Total (static) element count of a tree."""
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a: Tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_cast(a: Tree, dtype) -> Tree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_flatten_concat(a: Tree, dtype=jnp.float32) -> jax.Array:
+    """Concatenate every leaf into one flat vector (paper's global view)."""
+    leaves = jax.tree.leaves(a)
+    return jnp.concatenate([x.reshape(-1).astype(dtype) for x in leaves])
+
+
+def tree_unflatten_concat(flat: jax.Array, like: Tree) -> Tree:
+    """Inverse of tree_flatten_concat against a reference tree."""
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for x in leaves:
+        out.append(flat[off : off + x.size].reshape(x.shape).astype(x.dtype))
+        off += x.size
+    return jax.tree.unflatten(treedef, out)
+
+
+class CommCounters(NamedTuple):
+    """Algorithmic communication accounting (paper Tables 1-2 semantics).
+
+    All entries are scalar jnp values carried through the training state.
+    ``rounds`` counts uploads (one upload == one worker-to-server round);
+    ``bits_paper`` uses the paper's 32-bits-per-transmitted-element
+    convention; ``bits_wire`` additionally charges index bits for sparse
+    payloads (what a real transport would pay).
+    """
+
+    rounds: jax.Array
+    bits_paper: jax.Array
+    bits_wire: jax.Array
+
+    @staticmethod
+    def zeros() -> "CommCounters":
+        z = jnp.zeros((), jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+        return CommCounters(rounds=z, bits_paper=z, bits_wire=z)
+
+    def __add__(self, other: "CommCounters") -> "CommCounters":  # type: ignore[override]
+        return CommCounters(
+            self.rounds + other.rounds,
+            self.bits_paper + other.bits_paper,
+            self.bits_wire + other.bits_wire,
+        )
+
+
+def add_worker_axis(tree: Tree) -> Tree:
+    """Add a leading singleton axis to every leaf (shard_map out_specs with a
+    worker axis require rank >= 1 so per-worker outputs can concatenate)."""
+    return jax.tree.map(lambda x: jnp.asarray(x)[None], tree)
+
+
+def strip_worker_axis(tree: Tree) -> Tree:
+    """Inverse of add_worker_axis, applied to the local shard inside
+    shard_map (each worker sees a leading dim of 1)."""
+    return jax.tree.map(lambda x: x[0], tree)
+
+
+def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` so its size is a multiple of ``multiple``."""
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)

@@ -1,0 +1,7 @@
+from .synthetic import (
+    classification_stream,
+    make_batch,
+    synthetic_classification,
+    token_stream,
+)
+from .pipeline import ShardedLoader

@@ -1,0 +1,63 @@
+"""Host-side data pipeline: background prefetch + device placement.
+
+In a multi-host deployment each host feeds its addressable shard of the
+global batch (`jax.make_array_from_process_local_data`); in this single-host
+container the loader materializes the global batch and lets the sharding
+place it. Prefetch depth decouples host data generation from device step
+time (straggler hiding on the input side)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class ShardedLoader:
+    def __init__(
+        self,
+        source: Iterator[dict],
+        shardings: Optional[dict] = None,
+        prefetch: int = 2,
+    ):
+        self.source = source
+        self.shardings = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch: dict):
+        if self.shardings is None:
+            return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        return {
+            k: jax.device_put(v, self.shardings.get(k)) for k, v in batch.items()
+        }
+
+    def _worker(self):
+        try:
+            for batch in self.source:
+                if self._stop.is_set():
+                    return
+                self._q.put(self._place(batch))
+        except Exception as e:  # surface loader failures to the consumer
+            self._q.put(e)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the SASG hot spots. Each subpackage has:
+#   <name>.py  — pl.pallas_call + BlockSpec kernel (TPU target)
+#   ops.py     — jit'd public wrapper (interpret=True off-TPU)
+#   ref.py     — pure-jnp oracle used by the allclose test sweeps

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: block-local top-k selection (paper Definition 1,
+TPU-native block granularity — DESIGN.md §2).
+
+The flat vector is viewed as (n_blocks, block_size); each grid step loads a
+tile of TILE_BLOCKS rows into VMEM and selects the k_b largest-|x| entries
+per row with an iterative argmax (k_b is small: ~1% of block_size). All inner
+ops are rank-preserving vector ops (max/compare/select/iota) — no gathers —
+so the kernel maps onto the VPU; HBM traffic is exactly one read of x plus
+the (tiny) value/index outputs, i.e. the op is memory-bound at 1x read.
+
+Grid/BlockSpec: grid=(n_blocks // TILE_BLOCKS,), x tile (TILE_BLOCKS, BS) in
+VMEM; outputs tiled (TILE_BLOCKS, KB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_tile_kernel(x_ref, vals_ref, idx_ref, *, kb: int):
+    x = x_ref[...].astype(jnp.float32)          # (TB, BS)
+    tb, bs = x.shape
+    mag = jnp.abs(x)
+    col = jax.lax.broadcasted_iota(jnp.int32, (tb, bs), 1)
+
+    def body(i, carry):
+        mag_c = carry
+        mx = jnp.max(mag_c, axis=1, keepdims=True)             # (TB, 1)
+        # first column achieving the max (iota tie-break)
+        is_max = mag_c == mx
+        first = jnp.min(jnp.where(is_max, col, bs), axis=1, keepdims=True)
+        sel = col == first                                      # (TB, BS) one-hot
+        val = jnp.sum(jnp.where(sel, x, 0.0), axis=1)           # (TB,)
+        vals_ref[:, i] = val
+        idx_ref[:, i] = first[:, 0]
+        return jnp.where(sel, -jnp.inf, mag_c)
+
+    jax.lax.fori_loop(0, kb, body, mag)
+
+
+def block_topk_pallas(
+    x2d: jax.Array,          # (n_blocks, block_size), already padded
+    kb: int,
+    tile_blocks: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    nb, bs = x2d.shape
+    tile_blocks = min(tile_blocks, nb)
+    while nb % tile_blocks:
+        tile_blocks -= 1
+    grid = (nb // tile_blocks,)
+    kernel = functools.partial(_topk_tile_kernel, kb=kb)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_blocks, bs), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((tile_blocks, kb), lambda i: (i, 0)),
+            pl.BlockSpec((tile_blocks, kb), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, kb), jnp.float32),
+            jax.ShapeDtypeStruct((nb, kb), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x2d)
+    return vals, idx

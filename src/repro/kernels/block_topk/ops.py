@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the block top-k kernel: SparsePayload in/out,
+matching repro.core.topk.block_topk semantics (used when
+CompressorConfig.topk_impl == "kernel")."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topk import SparsePayload
+from repro.core.types import ceil_div, pad_to_multiple
+
+from .block_topk import block_topk_pallas
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def block_topk(x: jax.Array, k: int, block_size: int = 2048) -> SparsePayload:
+    assert x.ndim == 1
+    d = x.size
+    xp = pad_to_multiple(x.astype(jnp.float32), block_size)
+    nb = xp.size // block_size
+    kb = min(max(1, ceil_div(int(min(k, d)), nb)), block_size)
+    x2d = xp.reshape(nb, block_size)
+    # mask the padded tail so it is never selected
+    pos = jnp.arange(nb * block_size).reshape(nb, block_size)
+    x2d = jnp.where(pos < d, x2d, 0.0)
+    vals, idx = block_topk_pallas(x2d, kb, interpret=_use_interpret())
+    flat_idx = idx + (jnp.arange(nb, dtype=jnp.int32) * block_size)[:, None]
+    in_range = flat_idx < d
+    vals = jnp.where(in_range, vals, 0.0)
+    flat_idx = jnp.where(in_range, flat_idx, d - 1)
+    return SparsePayload(
+        values=vals.reshape(-1), indices=flat_idx.reshape(-1), size=d
+    )

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the block top-k kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_topk_ref(x2d: jax.Array, kb: int) -> tuple[jax.Array, jax.Array]:
+    """x2d: (n_blocks, block_size). Returns (values, local indices), matching
+    the kernel's iota tie-break (stable: lowest index wins on equal |x|)."""
+    mag = jnp.abs(x2d.astype(jnp.float32))
+    # lax.top_k is stable (earlier index wins ties), same as the kernel
+    _, idx = jax.lax.top_k(mag, kb)
+    vals = jnp.take_along_axis(x2d.astype(jnp.float32), idx, axis=1)
+    return vals, idx.astype(jnp.int32)

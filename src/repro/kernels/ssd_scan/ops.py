@@ -1,0 +1,63 @@
+"""jit'd wrapper: full chunked SSD through the Pallas intra-chunk kernel,
+signature-compatible with the pure-jnp oracle (repro.models.ssd.ssd_chunked)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_chunk_pallas
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)   softplus'd
+    a_log: jax.Array,  # (H,)
+    b: jax.Array,      # (B, S, G, N)
+    c: jax.Array,      # (B, S, G, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,
+):
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0
+    nc = s // chunk
+    rep = h // g
+
+    da = (-jnp.exp(a_log))[None, None, :] * dt
+    xr = x.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    br = b.reshape(bsz, nc, chunk, g, n).astype(jnp.float32)
+    cr = c.reshape(bsz, nc, chunk, g, n).astype(jnp.float32)
+    dtr = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    dar = da.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+
+    # intra-chunk diagonal + per-chunk state deltas: Pallas kernel
+    y_diag, states = ssd_chunk_pallas(xr, dtr, dar, br, cr, interpret=_use_interpret())
+
+    # inter-chunk recurrence + off-diagonal term (tiny; jnp)
+    cum = jnp.cumsum(dar, axis=2)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # (B, nc, H)
+
+    def scan_body(hprev, inp):
+        st, dec = inp
+        return hprev * dec[..., None, None] + st, hprev
+
+    hinit = (
+        jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+    hfin, hprevs = jax.lax.scan(
+        scan_body, hinit,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)           # (B, nc, H, P, N)
+
+    state_decay = jnp.exp(cum)                         # (B, nc, Q, H)
+    ch = jnp.repeat(cr, rep, axis=3)                   # (B, nc, Q, H, N)
+    y_off = jnp.einsum("bzqhn,bzhpn,bzqh->bzqhp", ch, hprevs, state_decay)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, hfin

@@ -1,0 +1,3 @@
+"""Oracle for the SSD kernel: the pure-jnp chunked implementation used by the
+model itself."""
+from repro.models.ssd import ssd_chunked as ssd_chunked_ref  # noqa: F401

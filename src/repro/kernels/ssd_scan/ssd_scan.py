@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk contraction (arXiv:2405.21060).
+
+Per (batch, chunk, head) grid cell, entirely in VMEM:
+
+    cum   = cumsum(da)                       (Q,)
+    L     = exp(cum_i - cum_j) . causal      (Q, Q)
+    y     = ((C B^T) . L . dt_j) X           (Q, P)   <- MXU matmuls
+    state = (B . (exp(cum_Q - cum) dt))^T X  (N, P)   <- chunk's state delta
+
+The O(S/Q) inter-chunk recurrence and the off-diagonal (state) term are tiny
+and stay in jnp (ops.py). The quadratic Q x Q work — the hot spot — never
+leaves VMEM; HBM traffic is one read of the chunk operands and one write of
+y/state, versus the pure-XLA path that materializes the (Q,Q) decay and
+score matrices in HBM.
+
+Grid: (B, n_chunks, H); blocks are one chunk x one head; B/C blocks map the
+head to its group (GQA-style n_groups sharing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, st_ref):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)     # (Q, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)      # (Q,)
+    da = da_ref[0, 0, :, 0].astype(jnp.float32)      # (Q,)
+    b = b_ref[0, 0, :, 0, :].astype(jnp.float32)     # (Q, N)
+    c = c_ref[0, 0, :, 0, :].astype(jnp.float32)     # (Q, N)
+    q = x.shape[0]
+
+    cum = jnp.cumsum(da)                             # (Q,)
+    seg = cum[:, None] - cum[None, :]                # (Q, Q)
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmat = jnp.where(row >= col, jnp.exp(seg), 0.0)
+
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)   # (Q, Q)
+    w = cb * lmat * dt[None, :]
+    y = jnp.dot(w, x, preferred_element_type=jnp.float32)      # (Q, P)
+
+    decay = jnp.exp(cum[-1] - cum) * dt                        # (Q,)
+    st = jnp.dot((b * decay[:, None]).T, x,
+                 preferred_element_type=jnp.float32)           # (N, P)
+
+    y_ref[0, 0, :, 0, :] = y
+    st_ref[0, 0, 0, :, :] = st.T                                # (P, N)
+
+
+def ssd_chunk_pallas(
+    x: jax.Array,      # (B, NC, Q, H, P)
+    dt: jax.Array,     # (B, NC, Q, H)
+    da: jax.Array,     # (B, NC, Q, H)
+    b: jax.Array,      # (B, NC, Q, G, N)
+    c: jax.Array,      # (B, NC, Q, G, N)
+    interpret: bool = False,
+):
+    bsz, nc, q, h, p = x.shape
+    g, n = b.shape[3], b.shape[4]
+    rep = h // g
+    grid = (bsz, nc, h)
+    y, st = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, q, 1), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, q, 1, n), lambda bi, ci, hi: (bi, ci, 0, hi // rep, 0)),
+            pl.BlockSpec((1, 1, q, 1, n), lambda bi, ci, hi: (bi, ci, 0, hi // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, da, b, c)
+    return y, st

@@ -1,0 +1,50 @@
+"""jit'd wrapper: fused EF + block top-k over a flat vector, producing a
+SparsePayload and the updated error buffer — drop-in for the unfused
+(compress + densify-subtract) path in repro.core.compressors."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topk import SparsePayload
+from repro.core.types import ceil_div, pad_to_multiple
+
+from .topk_ef import topk_ef_pallas
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def block_topk(x: jax.Array, k: int, block_size: int = 2048) -> SparsePayload:
+    """Plain block top-k through the fused kernel (zero error, lr=1)."""
+    p, _ = topk_ef(x, jnp.zeros_like(x, dtype=jnp.float32), jnp.float32(1.0),
+                   k, block_size)
+    return p
+
+
+def topk_ef(
+    grad: jax.Array,        # (d,) flat gradient
+    err: jax.Array,         # (d,) fp32 error buffer
+    lr: jax.Array,          # scalar
+    k: int,
+    block_size: int = 2048,
+) -> tuple[SparsePayload, jax.Array]:
+    assert grad.ndim == 1 and err.shape == grad.shape
+    d = grad.size
+    gp = pad_to_multiple(grad.astype(jnp.float32), block_size)
+    ep = pad_to_multiple(err.astype(jnp.float32), block_size)
+    nb = gp.size // block_size
+    kb = min(max(1, ceil_div(int(min(k, d)), nb)), block_size)
+    g2, e2 = gp.reshape(nb, block_size), ep.reshape(nb, block_size)
+    # zero the padded tail so it is never selected
+    pos = jnp.arange(nb * block_size).reshape(nb, block_size)
+    g2 = jnp.where(pos < d, g2, 0.0)
+    e2 = jnp.where(pos < d, e2, 0.0)
+    new_err, vals, idx = topk_ef_pallas(g2, e2, lr, kb, interpret=_use_interpret())
+    flat_idx = idx + (jnp.arange(nb, dtype=jnp.int32) * block_size)[:, None]
+    in_range = flat_idx < d
+    vals = jnp.where(in_range, vals, 0.0)
+    flat_idx = jnp.where(in_range, flat_idx, d - 1)
+    payload = SparsePayload(vals.reshape(-1), flat_idx.reshape(-1), d)
+    return payload, new_err.reshape(-1)[:d]

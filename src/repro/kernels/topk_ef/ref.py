@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused EF + block top-k kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_ef_ref(grad2d: jax.Array, err2d: jax.Array, lr, kb: int):
+    """Returns (new_err, values, local_indices) with the same semantics as
+    the kernel: g = lr*grad + err; per-row top-kb by |g| (stable ties);
+    new_err zeros the selected coordinates."""
+    g = lr * grad2d.astype(jnp.float32) + err2d.astype(jnp.float32)
+    mag = jnp.abs(g)
+    _, idx = jax.lax.top_k(mag, kb)                       # stable tie-break
+    vals = jnp.take_along_axis(g, idx, axis=1)
+    onehot = jax.nn.one_hot(idx, g.shape[1], dtype=bool)  # (nb, kb, bs)
+    taken = onehot.any(axis=1)
+    new_err = jnp.where(taken, 0.0, g)
+    return new_err, vals, idx.astype(jnp.int32)

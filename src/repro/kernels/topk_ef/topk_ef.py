@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused error-feedback + block top-k + residual update —
+the SASG hot loop (paper Algorithm 1, lines 4/7-8).
+
+Unfused, the per-step compression path reads/writes HBM four times over the
+model dimension d:
+
+    g = lr*grad + e     (read grad, read e, write g)
+    topk(g)             (read g)
+    e' = g - T_k(g)     (read g, write e')
+
+Fused, each d-element flows HBM->VMEM once and back once:
+
+    read grad, read e  ->  compute g, per-block top-k, e'  ->  write e', (v,i)
+
+i.e. 2 reads + 1 write of d floats + O(k) outputs versus 4 reads + 2 writes —
+a ~2x cut on the memory-bound term of the compression stage. Selection uses
+the same iterative masked-argmax as block_topk (VPU-only, no gathers).
+
+Grid/BlockSpec: grid=(n_blocks/TILE,), tiles (TILE, BS) of grad and err in
+VMEM; outputs: err' tile (TILE, BS), values/indices tiles (TILE, KB); lr is
+a scalar-prefetch style (1,1) VMEM operand broadcast by indexing map.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_ef_kernel(lr_ref, grad_ref, err_ref, newerr_ref, vals_ref, idx_ref,
+                    *, kb: int):
+    lr = lr_ref[0, 0]
+    g = lr * grad_ref[...].astype(jnp.float32) + err_ref[...].astype(jnp.float32)
+    tb, bs = g.shape
+    mag = jnp.abs(g)
+    col = jax.lax.broadcasted_iota(jnp.int32, (tb, bs), 1)
+
+    def body(i, carry):
+        mag_c, taken = carry
+        mx = jnp.max(mag_c, axis=1, keepdims=True)
+        is_max = mag_c == mx
+        first = jnp.min(jnp.where(is_max, col, bs), axis=1, keepdims=True)
+        sel = col == first
+        vals_ref[:, i] = jnp.sum(jnp.where(sel, g, 0.0), axis=1)
+        idx_ref[:, i] = first[:, 0]
+        return jnp.where(sel, -jnp.inf, mag_c), taken | sel
+
+    _, taken = jax.lax.fori_loop(
+        0, kb, body, (mag, jnp.zeros_like(mag, dtype=bool))
+    )
+    newerr_ref[...] = jnp.where(taken, 0.0, g)
+
+
+def topk_ef_pallas(
+    grad2d: jax.Array,       # (n_blocks, block_size)
+    err2d: jax.Array,        # (n_blocks, block_size) fp32
+    lr: jax.Array,           # scalar
+    kb: int,
+    tile_blocks: int = 8,
+    interpret: bool = False,
+):
+    nb, bs = grad2d.shape
+    tile_blocks = min(tile_blocks, nb)
+    while nb % tile_blocks:
+        tile_blocks -= 1
+    grid = (nb // tile_blocks,)
+    kernel = functools.partial(_topk_ef_kernel, kb=kb)
+    newerr, vals, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),                 # lr scalar
+            pl.BlockSpec((tile_blocks, bs), lambda i: (i, 0)),       # grad
+            pl.BlockSpec((tile_blocks, bs), lambda i: (i, 0)),       # err
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_blocks, bs), lambda i: (i, 0)),       # err'
+            pl.BlockSpec((tile_blocks, kb), lambda i: (i, 0)),       # values
+            pl.BlockSpec((tile_blocks, kb), lambda i: (i, 0)),       # indices
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, bs), jnp.float32),
+            jax.ShapeDtypeStruct((nb, kb), jnp.float32),
+            jax.ShapeDtypeStruct((nb, kb), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lr.reshape(1, 1).astype(jnp.float32), grad2d, err2d)
+    return newerr, vals, idx

@@ -1,0 +1,156 @@
+"""Post-compile HLO analysis: collective bytes + roofline terms (§Roofline).
+
+cost_analysis() gives per-device FLOPs and HBM bytes but NOT collective
+traffic, so collective bytes are parsed from the optimized (SPMD-partitioned,
+per-device) HLO text: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction's shapes, scaled by the standard
+ring-algorithm wire factors per group size.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+from .mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    # per-device bytes by op kind: 'result' = result-shape bytes,
+    # 'wire' = ring-model bytes actually crossing links per device
+    result_bytes: Dict[str, float] = field(default_factory=dict)
+    wire_bytes: Dict[str, float] = field(default_factory=dict)
+    counts: Dict[str, int] = field(default_factory=dict)
+    top: list = field(default_factory=list)  # (bytes, kind, shapes, op_name)
+
+    @property
+    def total_wire(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    def top_list(self, n: int = 12) -> list:
+        return sorted(self.top, reverse=True)[:n]
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]{0,120})')
+
+
+def collect_collectives(hlo_text: str, top_n: int = 12) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes, kind = m.group(1), m.group(2)
+        rb = _shape_bytes(shapes)
+        g = max(_group_size(line), 1)
+        nm = _OPNAME_RE.search(line)
+        stats.top.append(
+            (rb, kind, shapes[:80], nm.group(1) if nm else "")
+        )
+        if kind == "all-reduce":
+            # ring all-reduce: 2*(g-1)/g * payload per device
+            wire = 2.0 * (g - 1) / g * rb
+        elif kind == "all-gather":
+            # result holds g shards; each device receives (g-1)/g of result
+            wire = (g - 1) / g * rb
+        elif kind == "reduce-scatter":
+            # result is the local shard; sends (g-1) shard-sized messages
+            wire = (g - 1) * rb
+        elif kind == "all-to-all":
+            wire = (g - 1) / g * rb
+        else:  # collective-permute: one send+recv of the payload
+            wire = rb
+        stats.result_bytes[kind] = stats.result_bytes.get(kind, 0.0) + rb
+        stats.wire_bytes[kind] = stats.wire_bytes.get(kind, 0.0) + wire
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+    return stats
+
+
+def roofline_terms(
+    flops_per_device: float,
+    hbm_bytes_per_device: float,
+    wire_bytes_per_device: float,
+) -> dict:
+    compute_s = flops_per_device / PEAK_FLOPS_BF16
+    memory_s = hbm_bytes_per_device / HBM_BW
+    collective_s = wire_bytes_per_device / ICI_BW_PER_LINK
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    step_s = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "step_time_bound_s": step_s,
+        # fraction of roofline: useful-compute time / bound (set by caller
+        # against MODEL_FLOPS)
+    }
+
+
+def active_param_count(params_shape, moe_cfg=None) -> tuple:
+    """(total_params, active_params): active scales expert leaves by top_k/E
+    (plus shared experts, which are always active)."""
+    import jax
+
+    total = 0
+    active = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    for keypath, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if moe_cfg is not None and re.search(r"experts_", path):
+            active += n * (moe_cfg.top_k / moe_cfg.num_experts)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(active_params: float, tokens: float, kind: str) -> float:
+    """6*N*D for training, 2*N*D for inference-forward (global, all chips)."""
+    return (6.0 if kind == "train" else 2.0) * active_params * tokens

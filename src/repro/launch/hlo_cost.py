@@ -1,0 +1,258 @@
+"""While-loop-aware HLO cost analyzer.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each while-loop body ONCE,
+but scan-over-layers turns the entire model into a while body — so flops,
+bytes, and collective traffic are undercounted by ~L x (measured 13x on
+llama3-8b train_4k). This module parses the optimized per-device HLO text,
+recovers loop trip counts from the loop-condition constants, and aggregates
+
+  - dot FLOPs (2 * prod(result dims) * contracted dim),
+  - an HBM-traffic proxy (operand + result bytes of top-level fusions/ops),
+  - collective result/wire bytes (ring-model factors per replica-group size)
+
+with every instruction weighted by the product of enclosing trip counts.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],\{\}\d]+))\s+([\w\-]+)\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)=\{?%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+}
+
+
+def _shape_list(s: str):
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, shape in _shape_list(s):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclass
+class Inst:
+    name: str
+    opcode: str
+    result_shapes: str
+    line: str
+    callees: list
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_result: Dict[str, float] = field(default_factory=dict)
+    coll_wire: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "CompCost", w: float = 1.0):
+        self.flops += w * other.flops
+        self.bytes += w * other.bytes
+        for k, v in other.coll_result.items():
+            self.coll_result[k] = self.coll_result.get(k, 0.0) + w * v
+        for k, v in other.coll_wire.items():
+            self.coll_wire[k] = self.coll_wire.get(k, 0.0) + w * v
+
+
+def parse_computations(hlo: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur: Optional[str] = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line)
+        if m and line.endswith("{") and "->" in line:
+            cur = m.group(1)
+            comps[cur] = []
+            if raw.lstrip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INST_RE.match(line)
+        if mi:
+            name, shapes, opcode = mi.group(1), mi.group(2), mi.group(3)
+            callees = _CALL_RE.findall(line)
+            comps[cur].append(Inst(name, opcode, shapes, line, callees))
+    comps["__entry__"] = comps.get(entry, [])
+    return comps
+
+
+def build_shape_map(comps: Dict[str, list]) -> Dict[str, tuple]:
+    """name -> result shape (first shape in the def line), across all comps.
+    Parameter shapes come from their own def lines (`%p = f32[..] parameter`)."""
+    out: Dict[str, tuple] = {}
+    for insts in comps.values():
+        if not isinstance(insts, list):
+            continue
+        for inst in insts:
+            sl = _shape_list(inst.result_shapes)
+            if sl:
+                out[inst.name] = sl[0][1]
+    return out
+
+
+def _dot_flops(line: str, result_shapes: str, shape_of: Dict[str, tuple]) -> float:
+    """2 * prod(result) * contracted-size. Operand shapes are not printed
+    inline in CPU HLO, so the lhs shape is resolved via the global
+    name -> shape map built during parsing."""
+    shapes = _shape_list(result_shapes)
+    if not shapes:
+        return 0.0
+    _, rshape = shapes[0]
+    rsize = 1
+    for d in rshape:
+        rsize *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    lhs_shape = None
+    paren = line.split(" dot(", 1)
+    if len(paren) == 2:
+        ops = _OPERAND_RE.findall(paren[1].split(")", 1)[0])
+        if ops:
+            lhs_shape = shape_of.get(ops[0])
+    csize = 1
+    if m and lhs_shape:
+        for d in m.group(1).split(","):
+            if d:
+                di = int(d)
+                if di < len(lhs_shape):
+                    csize *= lhs_shape[di]
+    return 2.0 * rsize * csize
+
+
+def _trip_count(cond_insts: list) -> int:
+    """Loop trip count from the condition computation: the bound appears as
+    an s32 constant feeding the (possibly fusion-wrapped) compare — take the
+    largest positive integer constant in the condition."""
+    best = 1
+    for inst in cond_insts:
+        if inst.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", inst.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze(hlo: str) -> CompCost:
+    comps = parse_computations(hlo)
+    shape_of = build_shape_map(comps)
+    memo: Dict[str, CompCost] = {}
+
+    def cost_of(comp_name: str, stack=()) -> CompCost:
+        if comp_name in memo:
+            return memo[comp_name]
+        if comp_name in stack or comp_name not in comps:
+            return CompCost()
+        total = CompCost()
+        for inst in comps[comp_name]:
+            op = inst.opcode
+            if op == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w\.\-]+)", inst.line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", inst.line)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                if body:
+                    total.add(cost_of(body, stack + (comp_name,)), float(trips))
+                continue
+            if op in ("call", "conditional"):
+                for c in inst.callees:
+                    total.add(cost_of(c, stack + (comp_name,)))
+            elif op == "fusion":
+                # fusions internalize intermediates (we charge the fusion's
+                # result bytes below) but dots inside them are real compute
+                for c in inst.callees:
+                    sub = cost_of(c, stack + (comp_name,))
+                    total.flops += sub.flops
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES or base in (
+                "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute",
+            ):
+                rb = _shape_bytes(inst.result_shapes)
+                g = max(_group_size(inst.line), 1)
+                if base == "all-reduce":
+                    wire = 2.0 * (g - 1) / g * rb
+                elif base == "all-gather":
+                    wire = (g - 1) / g * rb
+                elif base == "reduce-scatter":
+                    wire = (g - 1) * rb
+                elif base == "all-to-all":
+                    wire = (g - 1) / g * rb
+                else:
+                    wire = rb
+                total.coll_result[base] = total.coll_result.get(base, 0.0) + rb
+                total.coll_wire[base] = total.coll_wire.get(base, 0.0) + wire
+            if op == "dot":
+                total.flops += _dot_flops(inst.line, inst.result_shapes, shape_of)
+            if op == "convolution":
+                # approximate: 2 * result * (kernel spatial x in-channels)
+                shapes = _shape_list(inst.line)
+                if len(shapes) >= 3:
+                    rsize = 1
+                    for d in shapes[0][1]:
+                        rsize *= d
+                    ksz = 1
+                    for d in shapes[2][1]:
+                        ksz *= d
+                    out_c = shapes[0][1][-1] if shapes[0][1] else 1
+                    total.flops += 2.0 * rsize * (ksz / max(out_c, 1))
+            # HBM proxy: charge result bytes once per top-level instruction
+            # (operands were produced and charged at their def site). Skip
+            # pure control/aliasing ops.
+            if op not in ("parameter", "constant", "tuple", "get-tuple-element",
+                          "bitcast", "while", "call", "conditional"):
+                total.bytes += _shape_bytes(inst.result_shapes)
+        memo[comp_name] = total
+        return total
+
+    return cost_of("__entry__")

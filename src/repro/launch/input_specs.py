@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation: everything here is abstract. Shapes are GLOBAL; the
+dry-run attaches NamedShardings per the strategy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import NUM_PATCH_TOKENS
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.family in ("mlp", "cnn"):
+        img = (28, 28, 1) if cfg.family == "mlp" else (32, 32, 3)
+        return {
+            "x": jax.ShapeDtypeStruct((b,) + img, jnp.float32),
+            "labels": jax.ShapeDtypeStruct((b,), i32),
+        }
+    if cfg.is_encdec:
+        ss = s // 2
+        return {
+            "frames": jax.ShapeDtypeStruct((b, ss, cfg.d_model), jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((b, ss), i32),
+            "labels": jax.ShapeDtypeStruct((b, ss), i32),
+        }
+    if cfg.frontend == "patch_embed":
+        np_tok = NUM_PATCH_TOKENS if s > NUM_PATCH_TOKENS else s // 4
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s - np_tok), i32),
+            "patch_embeds": jax.ShapeDtypeStruct((b, np_tok, cfg.d_model), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((b, s - np_tok), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        "labels": jax.ShapeDtypeStruct((b, s), i32),
+    }
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, init_cache) -> tuple:
+    """(cache_specs, tokens, pos) for one decode step against a seq_len cache."""
+    b, s = shape.global_batch, shape.seq_len
+    cache_shape = jax.eval_shape(lambda: init_cache(b, s))
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache_shape, tokens, pos
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.is_encdec:
+        ss = s // 2
+        return {
+            "frames": jax.ShapeDtypeStruct((b, ss, cfg.d_model), jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((b, ss), i32),
+        }
+    if cfg.frontend == "patch_embed":
+        np_tok = NUM_PATCH_TOKENS
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s - np_tok), i32),
+            "patch_embeds": jax.ShapeDtypeStruct((b, np_tok, cfg.d_model), jnp.float32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}

@@ -1,0 +1,48 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state. The dry-run entrypoint sets
+XLA_FLAGS=--xla_force_host_platform_device_count=<n> BEFORE importing jax.
+"""
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import numpy as np
+
+    import jax
+    from jax.sharding import AxisType, Mesh
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before importing jax"
+        )
+    return Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes,
+        axis_types=(AxisType.Auto,) * len(shape),
+    )
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    import jax
+    from jax.sharding import AxisType
+
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def required_device_count(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256
+
+
+# TPU v5e hardware constants used by the roofline analysis (§Roofline)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW_PER_LINK = 50e9         # bytes/s per link (we report per-link terms)
+HBM_PER_CHIP = 16 * 2 ** 30

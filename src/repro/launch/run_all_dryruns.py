@@ -1,0 +1,93 @@
+"""Drive the full dry-run matrix: every (arch x shape x mesh) cell in its own
+subprocess (each mesh needs its own --xla_force_host_platform_device_count,
+and a crashed partitioner must not take down the sweep).
+
+  PYTHONPATH=src python -m repro.launch.run_all_dryruns \
+      [--mesh single multi] [--jobs 2] [--arch ...] [--shape ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+ARCHS = [
+    "llama3_8b", "chatglm3_6b", "starcoder2_3b", "granite_20b", "kimi_k2",
+    "mixtral_8x7b", "recurrentgemma_9b", "mamba2_370m", "seamless_m4t_v2",
+    "internvl2_2b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run_one(arch, shape, mesh, out, algo, timeout):
+    tag = f"{arch}__{shape}__{mesh}"
+    path = os.path.join(out, f"{arch}__{shape}__{mesh}__{algo}.json")
+    if os.path.exists(path):
+        try:
+            rec = json.load(open(path))
+            if rec.get("status") in ("ok", "skipped"):
+                return tag, rec.get("status"), 0.0, "cached"
+        except json.JSONDecodeError:
+            pass
+    t0 = time.time()
+    env = dict(os.environ)
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--mesh", mesh,
+        "--algo", algo, "--out", out,
+    ]
+    try:
+        p = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout, env=env)
+        status = "ok" if p.returncode == 0 else "error"
+        if os.path.exists(path):
+            rec = json.load(open(path))
+            status = rec.get("status", status)
+        else:
+            rec = {"status": status, "reason": (p.stderr or "")[-400:]}
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "algo": algo, **rec}, f, indent=1)
+    except subprocess.TimeoutExpired:
+        status = "timeout"
+        with open(path, "w") as f:
+            json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                       "algo": algo, "status": "timeout"}, f, indent=1)
+    return tag, status, time.time() - t0, ""
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", nargs="+", default=["single", "multi"])
+    ap.add_argument("--arch", nargs="+", default=ARCHS)
+    ap.add_argument("--shape", nargs="+", default=SHAPES)
+    ap.add_argument("--algo", default="sasg")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = [
+        (a, s, m) for m in args.mesh for a in args.arch for s in args.shape
+    ]
+    print(f"{len(cells)} cells, {args.jobs} parallel jobs")
+    results = []
+    with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+        futs = [
+            ex.submit(run_one, a, s, m, args.out, args.algo, args.timeout)
+            for a, s, m in cells
+        ]
+        for f in futs:
+            tag, status, dt, note = f.result()
+            print(f"  {tag:55s} {status:8s} {dt:7.1f}s {note}", flush=True)
+            results.append((tag, status))
+    bad = [t for t, s in results if s not in ("ok", "skipped")]
+    print(f"done: {len(results) - len(bad)}/{len(results)} ok; failures: {bad}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,402 @@
+"""Model-zoo building blocks, pure JAX (no flax): params are nested dicts,
+every module is an (init, apply) pair of pure functions.
+
+Conventions
+-----------
+- weights are stored 2D/3D with named roles so `dist/sharding.py` can assign
+  PartitionSpecs from the param path (wq/wk/wv/wo, w_gate/w_up/w_down,
+  experts_*, embed, lm_head, ...).
+- compute dtype = cfg.compute_dtype (bf16 in production); softmax/logits and
+  normalization statistics in fp32.
+- attention is chunk-streamed (flash semantics: running max / normalizer via
+  lax.scan over KV or Q blocks) so the S x S score matrix never materializes;
+  sliding-window attention streams over a banded window only (O(S*W)).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Any
+NEG_INF = -1e30
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _init_normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple:
+    """cos/sin tables for `dim` rotary dims at integer positions (..., S)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array, style: str) -> jax.Array:
+    """x: (B, S, H, Dh). style: 'full' rotates all dims; 'half' (ChatGLM 2d
+    RoPE) rotates only the first half of head dims and passes the rest.
+
+    Rotate-half formulation (GPT-NeoX pairing: dims (i, i+rot/2)): contiguous
+    split + concat only. The interleaved (2i, 2i+1) pairing needs strided
+    slices + an interleaving reshape, which trips an XLA SPMD partitioner
+    CHECK inside partial-manual shard_map regions (see
+    tests/test_known_limits.py); the two pairings are equivalent up to a
+    fixed permutation of frequencies."""
+    dh = x.shape[-1]
+    rot = dh if style == "full" else dh // 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2 :]
+    c = cos[..., None, :]  # (..., S, 1, rot/2)
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return jnp.concatenate([out, xp], axis=-1) if rot < dh else out
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA) — chunk-streamed softmax
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d)
+    return {
+        "wq": _init_normal(ks[0], (d, hq * dh), sc, _pdtype(cfg)),
+        "wk": _init_normal(ks[1], (d, hkv * dh), sc, _pdtype(cfg)),
+        "wv": _init_normal(ks[2], (d, hkv * dh), sc, _pdtype(cfg)),
+        "wo": _init_normal(ks[3], (hq * dh, d), 1.0 / math.sqrt(hq * dh), _pdtype(cfg)),
+    }
+
+
+def _gqa_expand(q: jax.Array, hkv: int) -> jax.Array:
+    """(B,S,Hq,Dh) -> (B,S,Hkv,G,Dh) grouping query heads onto kv heads."""
+    b, s, hq, dh = q.shape
+    return q.reshape(b, s, hkv, hq // hkv, dh)
+
+
+def _chunked_softmax_attend(
+    q: jax.Array,        # (B, Sq, Hkv, G, Dh) fp32-scaled
+    k: jax.Array,        # (B, Skv, Hkv, Dh)
+    v: jax.Array,        # (B, Skv, Hkv, Dh)
+    q_offset,            # scalar: absolute position of q[0]
+    causal: bool,
+    window: int,         # 0 = unbounded
+    kv_chunk: int,
+) -> jax.Array:
+    """Flash-semantics streaming attention over KV chunks via lax.scan.
+
+    Never materializes (Sq, Skv); peak extra memory is (B, Sq, H, kv_chunk).
+    """
+    b, sq, hkv, g, dh = q.shape
+    skv = k.shape[1]
+    kv_chunk = min(kv_chunk, skv)
+    n_chunks = -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kblk, vblk = inp
+        kv_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", q, kblk.astype(q.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        mask = (kv_pos[None, :] <= q_pos[:, None]) if causal else jnp.ones(
+            (sq, kv_chunk), bool
+        )
+        mask = mask & (kv_pos[None, :] < skv)
+        if window:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vblk.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), ()
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc)
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4)  # (B, Sq, Hkv, G, Dh)
+
+
+def attention_apply(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,                      # (B, S, d)
+    positions: jax.Array,              # (S,) absolute positions
+    kind: str = "global",              # "global" | "swa" | "local"
+    cache: Optional[dict] = None,      # decode: {"k","v"} (B, Smax, Hkv, Dh)
+    cache_pos=None,                    # decode: scalar write position
+    cross_kv: Optional[tuple] = None,  # encdec cross-attn: (k, v) precomputed
+    causal: bool = True,
+    kv_chunk: int = 1024,
+):
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = _dtype(cfg)
+    x = x.astype(dt)
+
+    q = (x @ params["wq"].astype(dt)).reshape(b, s, hq, dh)
+    if cross_kv is None:
+        k = (x @ params["wk"].astype(dt)).reshape(b, s, hkv, dh)
+        v = (x @ params["wv"].astype(dt)).reshape(b, s, hkv, dh)
+        cos, sin = rope_angles(
+            positions, dh if cfg.rope_style == "full" else dh // 2, cfg.rope_theta
+        )
+        q = apply_rope(q, cos, sin, cfg.rope_style)
+        k = apply_rope(k, cos, sin, cfg.rope_style)
+    else:
+        k, v = cross_kv
+
+    new_cache = None
+    prefill = cache is not None and cross_kv is None and s > 1
+    if cache is not None and cross_kv is None:
+        cache_len = cache["k"].shape[1]
+        if prefill and s >= cache_len:
+            # prefill into a bounded (ring) cache: keep only the last
+            # cache_len keys/values; attention below runs on the full seq
+            ck = k[:, s - cache_len:].astype(cache["k"].dtype)
+            cv = v[:, s - cache_len:].astype(cache["v"].dtype)
+            cp = positions[s - cache_len:].astype(cache["pos"].dtype)
+            new_cache = {"k": ck, "v": cv, "pos": cp}
+        else:
+            # decode (or prefill that fits): write at cache_pos with absolute
+            # positions — windowed caches are ring buffers, slot != time
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+            cp = jax.lax.dynamic_update_slice(
+                cache["pos"], positions.astype(cache["pos"].dtype), (cache_pos,)
+            )
+            new_cache = {"k": ck, "v": cv, "pos": cp}
+            if not prefill:
+                k, v = ck, cv
+
+    qg = _gqa_expand(q, hkv) * (1.0 / math.sqrt(dh))
+    window = cfg.window if kind in ("swa", "local") else 0
+
+    if cache is not None and cross_kv is None and not prefill:
+        # decode path: q_len small; single pass with position mask
+        kv_pos = new_cache["pos"]  # (Skv,) absolute positions, -1 = empty
+        sNumer = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        q_pos = positions  # absolute positions of queries
+        mask = (kv_pos[None, :] <= q_pos[:, None]) & (kv_pos[None, :] >= 0)
+        if window:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        sNumer = jnp.where(mask[None, None, None], sNumer, NEG_INF)
+        p = jax.nn.softmax(sNumer, axis=-1)
+        out = jnp.einsum(
+            "bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        q_off = positions[0] if cross_kv is None else 0
+        out = _chunked_softmax_attend(
+            qg.astype(jnp.float32), k, v, q_off,
+            causal=causal and cross_kv is None, window=window, kv_chunk=kv_chunk,
+        )
+
+    out = out.reshape(b, s, hq * dh).astype(dt)
+    return out @ params["wo"].astype(dt), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    sc_in, sc_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(ff)
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        return {
+            "w_gate": _init_normal(ks[0], (d, ff), sc_in, _pdtype(cfg)),
+            "w_up": _init_normal(ks[1], (d, ff), sc_in, _pdtype(cfg)),
+            "w_down": _init_normal(ks[2], (ff, d), sc_out, _pdtype(cfg)),
+        }
+    return {
+        "w_up": _init_normal(ks[0], (d, ff), sc_in, _pdtype(cfg)),
+        "w_down": _init_normal(ks[1], (ff, d), sc_out, _pdtype(cfg)),
+    }
+
+
+def mlp_apply(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dt = _dtype(cfg)
+    x = x.astype(dt)
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_variant == "swiglu" else partial(
+            jax.nn.gelu, approximate=True
+        )
+        h = act(x @ params["w_gate"].astype(dt)) * (x @ params["w_up"].astype(dt))
+    else:
+        h = jax.nn.gelu(x @ params["w_up"].astype(dt), approximate=True)
+    return h @ params["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — GShard-style dense dispatch with per-group capacity
+# ---------------------------------------------------------------------------
+
+def moe_group_size(cfg: ModelConfig) -> int:
+    # keep the dispatch one-hot ~ T_local * group * k * cf bounded
+    return 256 if cfg.moe.top_k >= 4 else 1024
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.num_experts, m.d_expert
+    ks = jax.random.split(key, 5)
+    sc_in, sc_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "router": _init_normal(ks[0], (d, e), sc_in, jnp.float32),
+        "experts_gate": _init_normal(ks[1], (e, d, f), sc_in, _pdtype(cfg)),
+        "experts_up": _init_normal(ks[2], (e, d, f), sc_in, _pdtype(cfg)),
+        "experts_down": _init_normal(ks[3], (e, f, d), sc_out, _pdtype(cfg)),
+    }
+    if m.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=m.d_expert * m.num_shared_experts)
+    return p
+
+
+def moe_apply(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x: (B, S, d). Dense (GShard) dispatch: tokens grouped into blocks of
+    `group` with per-group expert capacity C = group*k/E*cf; one-hot dispatch
+    and combine einsums keep everything MXU-friendly and shardable (group dim
+    follows the batch/data sharding, expert dim follows the model axis)."""
+    m = cfg.moe
+    dt = _dtype(cfg)
+    b, s, d = x.shape
+    group = min(moe_group_size(cfg), b * s)
+    t = b * s
+    assert t % group == 0, f"tokens {t} not divisible by moe group {group}"
+    g = t // group
+    e, k = m.num_experts, m.top_k
+    cap = max(1, int(math.ceil(group * k / e * m.capacity_factor)))
+
+    xt = x.reshape(g, group, d)
+    logits = (xt.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (g, t, e)
+    topw, tope = jax.lax.top_k(probs, k)                        # (g, t, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's per-group queue
+    sel = jax.nn.one_hot(tope, e, dtype=jnp.int32)              # (g, t, k, e)
+    # rank over flattened (t, k) per group, preserving priority order
+    flat_sel = sel.reshape(g, group * k, e)
+    pos = jnp.cumsum(flat_sel, axis=1) - flat_sel               # (g, t*k, e)
+    slot = jnp.sum(pos * flat_sel, axis=-1).reshape(g, group, k)
+    keep = slot < cap
+    slot = jnp.minimum(slot, cap - 1)
+
+    # dispatch/combine one-hots (g, t, k, e, cap) collapsed over k
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=dt)               # (g, t, k, cap)
+    disp = jnp.einsum(
+        "gtke,gtkc->gtec", sel.astype(dt) * keep[..., None].astype(dt), slot_oh
+    )                                                            # (g, t, e, cap)
+    comb = jnp.einsum(
+        "gtke,gtkc,gtk->gtec",
+        sel.astype(dt), slot_oh, (topw * keep).astype(dt),
+    )
+
+    buf = jnp.einsum("gtd,gtec->gecd", xt.astype(dt), disp)     # (g, e, cap, d)
+    h = jnp.einsum("gecd,edf->gecf", buf, params["experts_gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", buf, params["experts_up"].astype(dt))
+    h = jax.nn.silu(h) * u
+    out_e = jnp.einsum("gecf,efd->gecd", h, params["experts_down"].astype(dt))
+    y = jnp.einsum("gecd,gtec->gtd", out_e, comb)
+
+    y = y.reshape(b, s, d)
+    if m.num_shared_experts:
+        y = y + mlp_apply(params["shared"], cfg, x)
+    return y
+
+
+def moe_aux_loss(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (used in training)."""
+    m = cfg.moe
+    logits = (x.reshape(-1, x.shape[-1]).astype(jnp.float32) @ params["router"])
+    probs = jax.nn.softmax(logits, -1)
+    top1 = jnp.argmax(probs, -1)
+    frac = jnp.mean(jax.nn.one_hot(top1, m.num_experts, dtype=jnp.float32), 0)
+    imp = jnp.mean(probs, 0)
+    return m.num_experts * jnp.sum(frac * imp)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / lm head
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig) -> Params:
+    return {
+        "embed": _init_normal(
+            key, (cfg.vocab_size, cfg.d_model), 1.0, _pdtype(cfg)
+        )
+    }
+
+
+def embed_apply(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    return params["embed"].astype(_dtype(cfg))[tokens]
+
+
+def lm_head_init(key, cfg: ModelConfig) -> Params:
+    return {
+        "lm_head": _init_normal(
+            key, (cfg.d_model, cfg.vocab_size), 1.0 / math.sqrt(cfg.d_model),
+            _pdtype(cfg),
+        )
+    }
+
+
+def lm_head_apply(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    return x.astype(_dtype(cfg)) @ params["lm_head"].astype(_dtype(cfg))

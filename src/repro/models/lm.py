@@ -1,0 +1,240 @@
+"""Decoder-only LM assembly: scan-over-layers with heterogeneous layer
+patterns (dense / MoE / SWA / RG-LRU / SSD), KV caches for decode, and
+modality-stub prefix embeddings (VLM).
+
+Layers are grouped into repeating *units* (cfg.attn_pattern); the layer stack
+is a ``lax.scan`` over units (keeps HLO size O(unit) instead of O(depth) —
+essential for 61-layer compile times), with any remainder layers applied
+unscanned so configs like RecurrentGemma's 38 = 12x(rglru,rglru,local)+2
+lower with their exact depth.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import layers as L
+from . import rglru as R
+from . import ssd as S
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# layer unit: init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": L.rmsnorm_init(cfg.d_model, jnp.float32)}
+    if kind in ("global", "swa", "local"):
+        p["attn"] = L.attention_init(ks[0], cfg)
+    elif kind == "rglru":
+        p["rglru"] = R.rglru_block_init(ks[0], cfg)
+    elif kind == "ssd":
+        p["ssd"] = S.ssd_block_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if kind != "ssd":  # mamba2 blocks have no separate MLP
+        p["norm2"] = L.rmsnorm_init(cfg.d_model, jnp.float32)
+        if cfg.moe is not None:
+            p["moe"] = L.moe_init(ks[1], cfg)
+        else:
+            p["mlp"] = L.mlp_init(ks[1], cfg)
+    return p
+
+
+def _layer_state_init(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+    """Decode-time per-layer state."""
+    if kind in ("global", "swa", "local"):
+        # windowed attention uses a bounded ring buffer (this is what makes
+        # long_500k decode O(window) for swa/local archs)
+        cache_len = max_seq if kind == "global" else min(max_seq, cfg.window * 2)
+        shape = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+        dt = jnp.dtype(cfg.compute_dtype)
+        return {
+            "k": jnp.zeros(shape, dt),
+            "v": jnp.zeros(shape, dt),
+            "pos": jnp.full((cache_len,), -1, jnp.int32),
+        }
+    if kind == "rglru":
+        return R.rglru_init_state(cfg, batch)
+    if kind == "ssd":
+        return S.ssd_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _layer_apply(
+    params: Params,
+    cfg: ModelConfig,
+    kind: str,
+    x: jax.Array,
+    positions: jax.Array,
+    state=None,
+    cache_pos=None,
+):
+    h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind in ("global", "swa", "local"):
+        # windowed caches: write position is modulo the cache length
+        cpos = cache_pos
+        if state is not None and kind in ("swa", "local"):
+            cpos = cache_pos % state["k"].shape[1]
+        out, new_state = L.attention_apply(
+            params["attn"], cfg, h, positions, kind=kind,
+            cache=state, cache_pos=cpos,
+        )
+    elif kind == "rglru":
+        out, new_state = R.rglru_block_apply(params["rglru"], cfg, h, state)
+    elif kind == "ssd":
+        out, new_state = S.ssd_block_apply(params["ssd"], cfg, h, state)
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    if kind != "ssd":
+        h2 = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            x = x + L.moe_apply(params["moe"], cfg, h2)
+        else:
+            x = x + L.mlp_apply(params["mlp"], cfg, h2)
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _unit_layout(cfg: ModelConfig):
+    u = len(cfg.attn_pattern)
+    n_units = cfg.n_layers // u
+    rem = cfg.n_layers - n_units * u
+    return u, n_units, rem
+
+
+def lm_init(key, cfg: ModelConfig) -> Params:
+    u, n_units, rem = _unit_layout(cfg)
+    ks = jax.random.split(key, 3 + u * n_units + rem)
+    params: dict = {}
+    params.update(L.embed_init(ks[0], cfg))
+    # stacked unit params: for each position j in the unit, leaves stacked
+    # over n_units along a new leading axis
+    unit = []
+    ki = 3
+    for j in range(u):
+        per = [
+            _layer_init(ks[ki + i * u + j], cfg, cfg.attn_pattern[j])
+            for i in range(n_units)
+        ]
+        unit.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+    params["unit"] = unit
+    ki += u * n_units
+    params["rem"] = [
+        _layer_init(ks[ki + j], cfg, cfg.attn_pattern[j]) for j in range(rem)
+    ]
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model, jnp.float32)
+    if not cfg.tie_embeddings:
+        params.update(L.lm_head_init(ks[1], cfg))
+    return params
+
+
+def lm_init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Any:
+    u, n_units, rem = _unit_layout(cfg)
+    unit = []
+    for j in range(u):
+        st = _layer_state_init(cfg, cfg.attn_pattern[j], batch, max_seq)
+        unit.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (n_units,) + x.shape), st))
+    remst = [
+        _layer_state_init(cfg, cfg.attn_pattern[j], batch, max_seq)
+        for j in range(rem)
+    ]
+    return {"unit": unit, "rem": remst}
+
+
+def _stack_body(cfg: ModelConfig, positions, cache_pos, remat: str):
+    u = len(cfg.attn_pattern)
+
+    def unit_body(x, unit_params, unit_state):
+        new_states = []
+        for j in range(u):
+            st = None if unit_state is None else unit_state[j]
+            x, ns = _layer_apply(
+                unit_params[j], cfg, cfg.attn_pattern[j], x, positions, st, cache_pos
+            )
+            new_states.append(ns)
+        return x, new_states
+
+    if remat == "full":
+        unit_body = jax.checkpoint(unit_body)
+    elif remat == "dots":
+        unit_body = jax.checkpoint(
+            unit_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+    return unit_body
+
+
+def lm_forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                   # (B, S)
+    prefix_embeds: Optional[jax.Array] = None,  # VLM stub: (B, Np, d)
+    cache: Optional[Any] = None,
+    cache_pos=None,                      # decode write position (scalar)
+    remat: str = "none",
+    return_hidden: bool = False,
+):
+    """Returns (logits-or-hidden, new_cache_or_None)."""
+    x = L.embed_apply(params, cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    seq = x.shape[1]
+    pos0 = 0 if cache_pos is None else cache_pos
+    positions = pos0 + jnp.arange(seq)
+
+    body = _stack_body(cfg, positions, cache_pos, remat)
+    u, n_units, rem = _unit_layout(cfg)
+
+    if n_units > 0:
+        def scan_fn(x, inp):
+            unit_params, unit_state = inp
+            x, ns = body(x, unit_params, unit_state)
+            return x, ns
+
+        xs = (params["unit"], cache["unit"] if cache is not None else None)
+        if cache is None:
+            # map None states through scan via a dummy per-step None pytree
+            xs = (params["unit"], [None] * u)
+            x, _ = jax.lax.scan(
+                lambda c, p: (body(c, p, None)[0], ()), x, params["unit"]
+            )
+            new_unit_cache = None
+        else:
+            x, new_unit_cache = jax.lax.scan(scan_fn, x, xs)
+    else:
+        new_unit_cache = None if cache is None else []
+
+    new_rem = []
+    for j in range(rem):
+        st = None if cache is None else cache["rem"][j]
+        x, ns = _layer_apply(
+            params["rem"][j], cfg, cfg.attn_pattern[j], x, positions, st, cache_pos
+        )
+        new_rem.append(ns)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"unit": new_unit_cache, "rem": new_rem}
+    if return_hidden:
+        return x, new_cache
+    if cfg.tie_embeddings:
+        logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    else:
+        logits = L.lm_head_apply(params, cfg, x)
+    return logits, new_cache

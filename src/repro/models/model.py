@@ -1,0 +1,191 @@
+"""Unified model API: build(config) -> Model with init / loss / prefill /
+decode, covering every assigned architecture family plus the paper's own
+models. Shapes in batches are GLOBAL (auto-SPMD view).
+
+Batch formats:
+  LM families:  {"tokens": (B,S) int32, "labels": (B,S) int32}
+  vlm:          + "patch_embeds": (B, Np, d)   (stub frontend, Np prefix)
+  audio encdec: {"frames": (B,S_src,d), "tokens": (B,S_tgt), "labels": ...}
+  mlp/cnn:      {"x": images, "labels": (B,) int32}
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import encdec as ED
+from . import layers as L
+from . import lm as LM
+from . import paper_nets as PN
+
+NUM_PATCH_TOKENS = 256     # VLM stub prefix length
+ENC_FRAC = 2               # enc-dec: S_src = S_tgt = seq_len // 2
+
+
+class Model(NamedTuple):
+    config: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss_fn: Callable[[Any, Any], jax.Array]           # (params, batch) -> loss
+    prefill: Optional[Callable]                        # (params, batch) -> (logits, cache)
+    decode_step: Optional[Callable]                    # (params, cache, tokens, pos) -> (logits, cache)
+    init_cache: Optional[Callable]                     # (batch, max_seq) -> cache
+
+
+def chunked_ce(
+    hidden: jax.Array,       # (B, S, d)
+    head_w: jax.Array,       # (d, V)
+    labels: jax.Array,       # (B, S)
+    n_chunks: int = 8,
+) -> jax.Array:
+    """Cross-entropy with the (B,S,V) logits materialized one S-chunk at a
+    time (fp32 logits over a 128k-256k vocab dominate activation memory
+    otherwise)."""
+    b, s, d = hidden.shape
+    n_chunks = min(n_chunks, s)
+    while s % n_chunks:
+        n_chunks -= 1
+    hs = hidden.reshape(b, n_chunks, s // n_chunks, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n_chunks, s // n_chunks).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        h, lab = inp
+        logits = (h @ head_w.astype(h.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), ()
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (b * s)
+
+
+def _head_weight(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# decoder-only LM families (dense / moe / hybrid / ssm / vlm)
+# ---------------------------------------------------------------------------
+
+def _build_lm(cfg: ModelConfig, remat: str) -> Model:
+    is_vlm = cfg.frontend == "patch_embed"
+
+    def init(key):
+        return LM.lm_init(key, cfg)
+
+    def loss_fn(params, batch):
+        prefix = batch.get("patch_embeds") if is_vlm else None
+        hidden, _ = LM.lm_forward(
+            params, cfg, batch["tokens"], prefix_embeds=prefix, remat=remat,
+            return_hidden=True,
+        )
+        if is_vlm and prefix is not None:
+            hidden = hidden[:, prefix.shape[1]:]
+        return chunked_ce(hidden, _head_weight(params, cfg), batch["labels"])
+
+    def prefill(params, batch):
+        prefix = batch.get("patch_embeds") if is_vlm else None
+        b = batch["tokens"].shape[0]
+        s = batch["tokens"].shape[1] + (prefix.shape[1] if prefix is not None else 0)
+        cache = LM.lm_init_cache(cfg, b, s)
+        logits, cache = LM.lm_forward(
+            params, cfg, batch["tokens"], prefix_embeds=prefix,
+            cache=cache, cache_pos=jnp.zeros((), jnp.int32), remat=remat,
+        )
+        return logits, cache
+
+    def decode_step(params, cache, tokens, pos):
+        logits, cache = LM.lm_forward(
+            params, cfg, tokens, cache=cache, cache_pos=pos
+        )
+        return logits, cache
+
+    def init_cache(batch, max_seq):
+        return LM.lm_init_cache(cfg, batch, max_seq)
+
+    return Model(cfg, init, loss_fn, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (audio)
+# ---------------------------------------------------------------------------
+
+def _build_encdec(cfg: ModelConfig, remat: str) -> Model:
+    def init(key):
+        return ED.encdec_init(key, cfg)
+
+    def loss_fn(params, batch):
+        enc = ED.encode(params, cfg, batch["frames"], remat=remat)
+        xkv = ED.cross_kv(params, cfg, enc)
+        logits, _ = ED.decode(params, cfg, batch["tokens"], xkv, remat=remat)
+        labels = batch["labels"]
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - gold)
+
+    def prefill(params, batch):
+        enc = ED.encode(params, cfg, batch["frames"], remat=remat)
+        xkv = ED.cross_kv(params, cfg, enc)
+        b, s = batch["tokens"].shape
+        cache = ED.encdec_init_cache(cfg, b, s)
+        logits, cache = ED.decode(
+            params, cfg, batch["tokens"], xkv, cache=cache,
+            cache_pos=jnp.zeros((), jnp.int32), remat=remat,
+        )
+        return logits, {"self": cache, "xkv": xkv}
+
+    def decode_step(params, cache, tokens, pos):
+        logits, self_cache = ED.decode(
+            params, cfg, tokens, cache["xkv"], cache=cache["self"], cache_pos=pos
+        )
+        return logits, {"self": self_cache, "xkv": cache["xkv"]}
+
+    def init_cache(batch, max_seq):
+        # cross-attn KV sized for a fixed source window at decode time
+        src = min(max_seq, 4096)
+        dt = jnp.dtype(cfg.compute_dtype)
+        xkv = {
+            "k": jnp.zeros((cfg.n_layers, batch, src, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((cfg.n_layers, batch, src, cfg.n_kv_heads, cfg.head_dim), dt),
+        }
+        return {"self": ED.encdec_init_cache(cfg, batch, max_seq), "xkv": xkv}
+
+    return Model(cfg, init, loss_fn, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# paper models
+# ---------------------------------------------------------------------------
+
+def _build_paper(cfg: ModelConfig) -> Model:
+    is_fc = cfg.family == "mlp"
+
+    def init(key):
+        return PN.fc_init(key, cfg) if is_fc else PN.cnn_init(key, cfg)
+
+    def loss_fn(params, batch):
+        logits = (PN.fc_apply if is_fc else PN.cnn_apply)(params, cfg, batch["x"])
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), labels[..., None], axis=-1
+        )[..., 0]
+        return jnp.mean(lse - gold)
+
+    def predict(params, batch):
+        return (PN.fc_apply if is_fc else PN.cnn_apply)(params, cfg, batch["x"])
+
+    return Model(cfg, init, loss_fn, predict, None, None)
+
+
+def build(cfg: ModelConfig, remat: str = "none") -> Model:
+    if cfg.family in ("mlp", "cnn"):
+        return _build_paper(cfg)
+    if cfg.is_encdec:
+        return _build_encdec(cfg, remat)
+    return _build_lm(cfg, remat)

@@ -1,0 +1,115 @@
+"""The paper's own experiment models (Section 5.1), in pure JAX.
+
+- ``fc_mnist``: two-layer fully-connected net, 512 hidden units, 10 classes.
+- ``cnn_cifar``: ResNet-style CNN (3 stages x 2 basic blocks, GroupNorm in
+  place of BatchNorm so the model stays stateless/pure).
+
+Both are used by the paper-reproduction benchmarks (Tables 2-3, Figs 2-6) to
+compare SGD / Sparse / LASG / SASG.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Any
+
+
+def _dense_init(key, din, dout):
+    k1, k2 = jax.random.split(key)
+    lim = 1.0 / math.sqrt(din)
+    return {
+        "w": jax.random.uniform(k1, (din, dout), jnp.float32, -lim, lim),
+        "b": jnp.zeros((dout,), jnp.float32),
+    }
+
+
+def fc_init(key, cfg: ModelConfig, input_dim: int = 784) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc1": _dense_init(k1, input_dim, cfg.d_model),
+        "fc2": _dense_init(k2, cfg.d_model, cfg.vocab_size),
+    }
+
+
+def fc_apply(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# compact ResNet (CIFAR)
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return (jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+            * math.sqrt(2.0 / fan_in))
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _gn(x, params, groups=8):
+    b, h, w, c = x.shape
+    xg = x.reshape(b, h, w, groups, c // groups)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + 1e-5)
+    return xg.reshape(b, h, w, c) * params["scale"] + params["bias"]
+
+
+def _gn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _block_init(key, cin, cout, stride):
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": _conv_init(ks[0], 3, 3, cin, cout), "gn1": _gn_init(cout),
+        "conv2": _conv_init(ks[1], 3, 3, cout, cout), "gn2": _gn_init(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(ks[2], 1, 1, cin, cout)
+    return p
+
+
+def _block_apply(p, x, stride):
+    h = jax.nn.relu(_gn(_conv(x, p["conv1"], stride), p["gn1"]))
+    h = _gn(_conv(h, p["conv2"]), p["gn2"])
+    skip = _conv(x, p["proj"], stride) if "proj" in p else x
+    return jax.nn.relu(h + skip)
+
+
+def cnn_init(key, cfg: ModelConfig, in_ch: int = 3) -> Params:
+    c = cfg.d_model  # base width (64)
+    ks = jax.random.split(key, 9)
+    return {
+        "stem": _conv_init(ks[0], 3, 3, in_ch, c), "gn0": _gn_init(c),
+        "s1b1": _block_init(ks[1], c, c, 1), "s1b2": _block_init(ks[2], c, c, 1),
+        "s2b1": _block_init(ks[3], c, 2 * c, 2), "s2b2": _block_init(ks[4], 2 * c, 2 * c, 1),
+        "s3b1": _block_init(ks[5], 2 * c, 4 * c, 2), "s3b2": _block_init(ks[6], 4 * c, 4 * c, 1),
+        "head": _dense_init(ks[7], 4 * c, cfg.vocab_size),
+    }
+
+
+def cnn_apply(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = jax.nn.relu(_gn(_conv(x, params["stem"]), params["gn0"]))
+    h = _block_apply(params["s1b1"], h, 1)
+    h = _block_apply(params["s1b2"], h, 1)
+    h = _block_apply(params["s2b1"], h, 2)
+    h = _block_apply(params["s2b2"], h, 1)
+    h = _block_apply(params["s3b1"], h, 2)
+    h = _block_apply(params["s3b2"], h, 1)
+    h = h.mean(axis=(1, 2))
+    return h @ params["head"]["w"] + params["head"]["b"]

@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)                      (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                      (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (learned decay, c=8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses a log-depth ``lax.associative_scan`` over time; decode
+is the one-step recurrence with a carried (B, W) state. The full block is the
+Griffin recurrent block: linear-in -> causal depthwise conv -> RG-LRU, gated
+by a parallel GELU branch, linear-out.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+C_DECAY = 8.0
+
+
+def _pdtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _init_normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def rglru_block_init(key, cfg: ModelConfig) -> Any:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    conv = cfg.rglru.d_conv
+    ks = jax.random.split(key, 7)
+    sc = 1.0 / math.sqrt(d)
+    return {
+        "w_in": _init_normal(ks[0], (d, w), sc, _pdtype(cfg)),
+        "w_gate": _init_normal(ks[1], (d, w), sc, _pdtype(cfg)),
+        "conv_w": _init_normal(ks[2], (conv, w), 1.0 / math.sqrt(conv), _pdtype(cfg)),
+        "wa": _init_normal(ks[3], (w, w), 1.0 / math.sqrt(w), _pdtype(cfg)),
+        "wx": _init_normal(ks[4], (w, w), 1.0 / math.sqrt(w), _pdtype(cfg)),
+        # Lambda parametrized so a ~ U[0.9, 0.999] at init (paper App. A)
+        "lam": jax.random.uniform(ks[5], (w,), jnp.float32, 0.7, 1.3),
+        "w_out": _init_normal(ks[6], (w, d), 1.0 / math.sqrt(w), _pdtype(cfg)),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array]):
+    """x: (B, S, W); w: (K, W). Returns (y, new_state) with causal padding.
+
+    state (decode): (B, K-1, W) trailing inputs from previous steps."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    # depthwise conv as sum of shifted scalings (k is tiny: 4)
+    s_out = x.shape[1]
+    y = sum(xp[:, i : i + s_out, :] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else None
+    return y, new_state
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array]) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t via associative scan over axis 1 (time)."""
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        # fold the initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(b.dtype))
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block_apply(
+    params: Any,
+    cfg: ModelConfig,
+    x: jax.Array,                 # (B, S, d)
+    state: Optional[dict] = None,  # decode: {"h": (B,W), "conv": (B,K-1,W)}
+):
+    dt = _dtype(cfg)
+    x = x.astype(dt)
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(dt), approximate=True)
+    u = x @ params["w_in"].astype(dt)
+    u, conv_state = _causal_depthwise_conv(
+        u, params["conv_w"].astype(dt), None if state is None else state["conv"]
+    )
+
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(u32 @ params["wa"].astype(jnp.float32))
+    i = jax.nn.sigmoid(u32 @ params["wx"].astype(jnp.float32))
+    log_a = -C_DECAY * jax.nn.softplus(params["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * u32)
+
+    if state is None or x.shape[1] > 1:
+        h0 = None if state is None else state["h"]
+        h = rglru_scan(a, b, h0)
+    else:
+        h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+        h = h[:, None, :]
+
+    new_state = {"h": h[:, -1, :], "conv": conv_state}
+    y = (h.astype(dt) * gate) @ params["w_out"].astype(dt)
+    return y, new_state
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.rglru.lru_width or cfg.d_model
+    k = cfg.rglru.d_conv
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, k - 1, w), _dtype(cfg)),
+    }

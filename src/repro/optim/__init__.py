@@ -1,0 +1,11 @@
+from .optimizers import (
+    GradientTransformation,
+    adamw,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    momentum,
+    scale_by_lr,
+    sgd,
+)
+from .schedules import constant, cosine_decay, step_decay, warmup_cosine

@@ -1,0 +1,125 @@
+"""Self-built optax-style optimizer library (init/update transforms).
+
+The paper's algorithms use plain SGD with the learning rate folded into the
+compressed quantity (fold_lr mode applies `params - update` directly, lr=1
+here). For beyond-paper composition (fold_lr=False) the exchange output is a
+compressed mean gradient that any transform below can consume — e.g. SASG +
+Adam is the CADA-style variant.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[Tree], Any]
+    update: Callable[[Tree, Any, Optional[Tree]], tuple]  # (grads, state, params)
+
+
+def scale_by_lr(lr: float | Callable) -> GradientTransformation:
+    def init(params):
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, count, params=None):
+        rate = lr(count) if callable(lr) else lr
+        return jax.tree.map(lambda g: g * rate, grads), count + 1
+
+    return GradientTransformation(init, update)
+
+
+def sgd(lr: float | Callable = 1.0) -> GradientTransformation:
+    return scale_by_lr(lr)
+
+
+def momentum(lr: float | Callable, beta: float = 0.9, nesterov: bool = False) -> GradientTransformation:
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params=None):
+        mu = jax.tree.map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state["mu"], grads
+        )
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32), mu, grads)
+        else:
+            upd = mu
+        rate = lr(state["count"]) if callable(lr) else lr
+        upd = jax.tree.map(lambda u: u * rate, upd)
+        return upd, {"mu": mu, "count": state["count"] + 1}
+
+    return GradientTransformation(init, update)
+
+
+def adamw(
+    lr: float | Callable,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> GradientTransformation:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params=None):
+        c = state["count"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** c.astype(jnp.float32)), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** c.astype(jnp.float32)), v)
+        rate = lr(state["count"]) if callable(lr) else lr
+        upd = jax.tree.map(lambda m_, v_: rate * m_ / (jnp.sqrt(v_) + eps), mh, vh)
+        if weight_decay and params is not None:
+            upd = jax.tree.map(
+                lambda u, p: u + rate * weight_decay * p.astype(jnp.float32), upd, params
+            )
+        return upd, {"m": m, "v": v, "count": c}
+
+    return GradientTransformation(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        leaves = jax.tree.leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+        return jax.tree.map(lambda g: g * scale, grads), state
+
+    return GradientTransformation(init, update)
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, states, params=None):
+        new_states = []
+        for t, s in zip(transforms, states):
+            grads, ns = t.update(grads, s, params)
+            new_states.append(ns)
+        return grads, tuple(new_states)
+
+    return GradientTransformation(init, update)
+
+
+def apply_updates(params: Tree, updates: Tree) -> Tree:
+    """params - updates (updates carry the lr sign convention)."""
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
+                        params, updates)

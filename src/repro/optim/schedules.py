@@ -1,0 +1,39 @@
+"""Learning-rate schedules (callables: step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def step_decay(lr: float, boundaries, factor: float = 0.1):
+    """Paper's schedule: decay by `factor` at each boundary step."""
+    bounds = jnp.asarray(sorted(boundaries), jnp.int32)
+
+    def fn(step):
+        n = jnp.sum(step >= bounds)
+        return jnp.float32(lr) * jnp.float32(factor) ** n
+
+    return fn
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return jnp.float32(lr) * (
+            final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        )
+
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, jnp.float32(lr) * w, cos(step - warmup))
+
+    return fn

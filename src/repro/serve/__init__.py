@@ -1,0 +1,1 @@
+from .engine import BatchedServer, BuiltServe, Request, build_serve

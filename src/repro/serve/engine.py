@@ -1,0 +1,144 @@
+"""Serving engine: prefill + batched decode steps.
+
+Serving uses no SASG (inference has no gradient traffic); params are FSDP x
+TP sharded like training so multi-hundred-GB models fit. `decode_step` is the
+unit the decode_32k / long_500k dry-run shapes lower: one new token per
+sequence against a seq_len KV cache (or O(1) recurrent state for SSM/RG-LRU
+archs — that is exactly what makes long_500k runnable for them).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import cache_specs, param_specs
+from repro.models.model import Model
+
+
+class BuiltServe(NamedTuple):
+    prefill: Callable            # (params, batch) -> (logits, cache)
+    decode_step: Callable        # pure: (params, cache, tokens, pos) -> (logits, cache)
+    jit_decode: Callable
+    init_cache: Callable
+    param_shardings: Any
+    cache_sharding_fn: Callable
+
+
+def build_serve(model: Model, mesh, fsdp: Optional[str], tp: Optional[str],
+                dp: Optional[str] = "data") -> BuiltServe:
+    cfg = model.config
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_specs(params_shape, mesh, fsdp, tp)
+    to_sh = lambda specs: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    param_shardings = to_sh(pspecs)
+
+    def cache_sharding_fn(cache):
+        return to_sh(cache_specs(cache, mesh, dp, tp))
+
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    def jit_decode(params, cache, tokens, pos):
+        fn = jax.jit(
+            decode_step,
+            in_shardings=(
+                param_shardings,
+                cache_sharding_fn(cache),
+                NamedSharding(mesh, P(dp, None)),
+                NamedSharding(mesh, P()),
+            ),
+            donate_argnums=(1,),
+        )
+        return fn(params, cache, tokens, pos)
+
+    return BuiltServe(
+        prefill=model.prefill,
+        decode_step=decode_step,
+        jit_decode=jit_decode,
+        init_cache=model.init_cache,
+        param_shardings=param_shardings,
+        cache_sharding_fn=cache_sharding_fn,
+    )
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+
+
+class BatchedServer:
+    """Minimal continuous-batching loop over a fixed decode batch size.
+
+    Requests join free slots; every engine tick decodes one token for every
+    active slot. Greedy sampling (argmax) — the engine is about the systems
+    path, not sampling strategy."""
+
+    def __init__(self, serve: BuiltServe, params, cfg: ModelConfig,
+                 batch_size: int, max_seq: int):
+        self.serve = serve
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch_size
+        self.max_seq = max_seq
+        self.cache = serve.init_cache(batch_size, max_seq)
+        self.pos = jnp.zeros((), jnp.int32)
+        self.slots: list[Optional[dict]] = [None] * batch_size
+        self.completed: list[dict] = []
+
+    def submit(self, req: Request) -> bool:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = {
+                    "req": req, "generated": [], "fed": 0,
+                }
+                return True
+        return False
+
+    def _next_tokens(self) -> np.ndarray:
+        toks = np.zeros((self.batch, 1), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            req = s["req"]
+            if s["fed"] < len(req.prompt):
+                toks[i, 0] = req.prompt[s["fed"]]
+                s["fed"] += 1
+            elif s["generated"]:
+                toks[i, 0] = s["generated"][-1]
+        return toks
+
+    def tick(self):
+        toks = jnp.asarray(self._next_tokens())
+        logits, self.cache = self.serve.jit_decode(
+            self.params, self.cache, toks, self.pos
+        )
+        self.pos = self.pos + 1
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            req = s["req"]
+            if s["fed"] >= len(req.prompt):
+                s["generated"].append(int(nxt[i]))
+                if len(s["generated"]) >= req.max_new_tokens:
+                    self.completed.append(
+                        {"uid": req.uid, "tokens": list(s["generated"])}
+                    )
+                    self.slots[i] = None
+
+    def drain(self, max_ticks: int = 10000):
+        t = 0
+        while any(s is not None for s in self.slots) and t < max_ticks:
+            self.tick()
+            t += 1
+        return self.completed

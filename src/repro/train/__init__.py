@@ -1,0 +1,3 @@
+from .step import BuiltStep, TrainState, build_train_step
+from .loop import Trainer, TrainerConfig
+from . import checkpoint

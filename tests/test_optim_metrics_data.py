@@ -1,0 +1,115 @@
+"""Optimizers, schedules, comm metrics model, data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import CommModel, LinkModel
+from repro.data import ShardedLoader, synthetic_classification, token_stream
+from repro.optim import (
+    adamw,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    constant,
+    cosine_decay,
+    momentum,
+    sgd,
+    step_decay,
+    warmup_cosine,
+)
+
+
+def _quad_problem():
+    A = jnp.asarray(np.diag([1.0, 5.0, 10.0]).astype(np.float32))
+
+    def loss(p):
+        return 0.5 * p @ A @ p
+
+    return loss, jnp.asarray([1.0, 1.0, 1.0])
+
+
+def test_sgd_momentum_adam_converge():
+    loss, p0 = _quad_problem()
+    for opt in [sgd(0.05), momentum(0.05, 0.9), adamw(0.3)]:
+        p, st = p0, opt.init(p0)
+        for _ in range(200):
+            g = jax.grad(loss)(p)
+            upd, st = opt.update(g, st, p)
+            p = apply_updates(p, upd)
+        assert float(loss(p)) < 1e-3
+
+
+def test_clip_and_chain():
+    loss, p0 = _quad_problem()
+    opt = chain(clip_by_global_norm(1.0), sgd(0.1))
+    st = opt.init(p0)
+    g = jax.tree.map(lambda x: x * 1e6, jax.grad(loss)(p0))
+    upd, st = opt.update(g, st, p0)
+    gn = float(jnp.linalg.norm(upd))
+    assert gn <= 0.1 + 1e-5
+
+
+def test_schedules():
+    assert float(constant(0.1)(jnp.asarray(0))) == np.float32(0.1)
+    sd = step_decay(0.1, [10, 20])
+    assert abs(float(sd(jnp.asarray(5))) - 0.1) < 1e-7
+    assert abs(float(sd(jnp.asarray(15))) - 0.01) < 1e-7
+    assert abs(float(sd(jnp.asarray(25))) - 0.001) < 1e-8
+    wc = warmup_cosine(1.0, 10, 100)
+    assert float(wc(jnp.asarray(5))) < 1.0
+    assert float(wc(jnp.asarray(10))) >= float(wc(jnp.asarray(90)))
+    cd = cosine_decay(1.0, 100)
+    assert float(cd(jnp.asarray(100))) <= 0.11
+
+
+def test_comm_model_table1():
+    """Paper Table 1 cost model identities."""
+    m = CommModel(d=1_000_000, k=10_000, M=10)
+    assert m.bits_per_iter("sgd") == 32 * m.d * m.M
+    assert m.bits_per_iter("sparse") == 32 * m.k * m.M
+    # SASG total with realized rounds R: 32 k R
+    assert m.total_bits("sasg", T=100, sum_rounds=600) == 32 * m.k * 600
+    assert m.total_bits("lasg", T=100, sum_rounds=600) == 32 * m.d * 600
+    # SASG <= Sparse <= SGD orderings at equal rounds
+    assert m.total_bits("sasg", 100, 1000) <= m.bits_per_iter("sparse") * 100
+    assert m.bits_per_iter("sparse") <= m.bits_per_iter("sgd")
+
+
+def test_link_model_table3():
+    lm = LinkModel(bandwidth_bps=1e9, latency_s=0.0, sequential_uplink=True)
+    # 10 dense uploads of 4e6 floats at 1 Gbps: ~1.28 s
+    t_dense = lm.upload_time(32.0 * 4e6, 10)
+    t_sparse = lm.upload_time(32.0 * 4e4, 10)
+    assert t_dense / t_sparse == 100.0
+
+
+def test_token_stream_learnable_structure():
+    s = token_stream(vocab=32, batch=4, seq=64, seed=0, bigram_order=1.0)
+    b = next(s)
+    toks, labels = b["tokens"], b["labels"]
+    assert toks.shape == (4, 64) and labels.shape == (4, 64)
+    # labels are next tokens
+    assert (toks[:, 1:] == labels[:, :-1]).all()
+    # with bigram_order=1, successor is a function of current token
+    mapping = {}
+    for t, l in zip(toks.reshape(-1), labels.reshape(-1)):
+        assert mapping.setdefault(int(t), int(l)) == int(l)
+
+
+def test_sharded_loader_prefetch():
+    src = token_stream(vocab=16, batch=2, seq=8, seed=1)
+    loader = ShardedLoader(src, shardings=None, prefetch=2)
+    b1, b2 = next(loader), next(loader)
+    assert b1["tokens"].shape == (2, 8)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    loader.close()
+
+
+def test_synthetic_classification_learnable():
+    x, y = synthetic_classification(256, 10, (28, 28, 1), seed=0, noise=0.1)
+    # nearest-template classification should be near-perfect at low noise
+    templates = np.stack([x[y == c].mean(0) for c in range(10)])
+    pred = np.argmin(
+        ((x[:, None] - templates[None]) ** 2).sum((2, 3, 4)), axis=1
+    )
+    assert (pred == y).mean() > 0.95

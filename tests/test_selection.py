@@ -1,0 +1,79 @@
+"""Unit tests of the adaptive selection rule (paper eq. 6)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selection import (
+    SelectionConfig,
+    SelectionState,
+    advance_tau,
+    init_selection,
+    push_window,
+    should_send,
+)
+
+
+def _state(tau=1, window=None, D=4):
+    return SelectionState(
+        tau=jnp.asarray(tau, jnp.int32),
+        window=jnp.asarray(window if window is not None else np.zeros(D), jnp.float32),
+    )
+
+
+def test_send_when_difference_large():
+    cfg = SelectionConfig(max_delay=4)
+    g_new = {"w": jnp.ones(8)}
+    g_stale = {"w": jnp.zeros(8)}
+    st = _state(window=[0.001] * 4)
+    alphas = jnp.ones(4)
+    assert bool(should_send(cfg, g_new, g_stale, st, alphas, num_workers=4))
+
+
+def test_skip_when_difference_small():
+    cfg = SelectionConfig(max_delay=4)
+    g = {"w": jnp.ones(8)}
+    st = _state(window=[100.0] * 4)
+    alphas = jnp.ones(4)
+    assert not bool(should_send(cfg, g, g, st, alphas, num_workers=4))
+
+
+def test_staleness_cap_forces_send():
+    cfg = SelectionConfig(max_delay=4)
+    g = {"w": jnp.ones(8)}
+    st = _state(tau=4, window=[100.0] * 4)
+    assert bool(should_send(cfg, g, g, st, jnp.ones(4), num_workers=4))
+
+
+def test_deadline_skip_override():
+    """Straggler mitigation: force_skip pushes the worker into M_c unless the
+    staleness cap fires."""
+    cfg = SelectionConfig(max_delay=4, deadline_skip=True)
+    g_new = {"w": jnp.ones(8)}
+    g_stale = {"w": jnp.zeros(8)}
+    st = _state(tau=1, window=[0.0] * 4)
+    send = should_send(cfg, g_new, g_stale, st, jnp.ones(4), 4,
+                       force_skip=jnp.asarray(True))
+    assert not bool(send)
+    st_capped = _state(tau=4, window=[0.0] * 4)
+    send = should_send(cfg, g_new, g_stale, st_capped, jnp.ones(4), 4,
+                       force_skip=jnp.asarray(True))
+    assert bool(send)
+
+
+def test_tau_and_window_updates():
+    st = _state(tau=2, window=[1.0, 2.0, 3.0, 4.0])
+    assert int(advance_tau(st, jnp.asarray(True))) == 1
+    assert int(advance_tau(st, jnp.asarray(False))) == 3
+    w = push_window(st, jnp.asarray(9.0))
+    np.testing.assert_allclose(np.asarray(w), [9.0, 1.0, 2.0, 3.0])
+
+
+def test_m_squared_scaling():
+    """rhs scales as 1/M^2 (paper eq. 6): more workers -> stricter skipping."""
+    cfg = SelectionConfig(max_delay=2)
+    g_new = {"w": jnp.full(8, 0.1)}
+    g_stale = {"w": jnp.zeros(8)}
+    st = _state(window=[10.0, 10.0], D=2)
+    a = jnp.ones(2)
+    send_small_m = bool(should_send(cfg, g_new, g_stale, st, a, num_workers=2))
+    send_large_m = bool(should_send(cfg, g_new, g_stale, st, a, num_workers=64))
+    assert (not send_small_m) and send_large_m

@@ -1,0 +1,112 @@
+"""Unit + property tests for the sparsification operators (paper Def. 1,
+Lemma 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topk import (
+    BlockPayload,
+    block_topk,
+    blocked_topk,
+    blocked_view_shape,
+    exact_topk,
+    random_k,
+)
+
+
+def test_exact_topk_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=257).astype(np.float32))
+    p = exact_topk(x, 17)
+    top = np.argsort(-np.abs(np.asarray(x)))[:17]
+    assert set(np.asarray(p.indices).tolist()) == set(top.tolist())
+    np.testing.assert_allclose(np.asarray(p.densify())[top], np.asarray(x)[top])
+
+
+@given(
+    d=st.integers(3, 500),
+    kfrac=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=40, deadline=None)
+def test_exact_topk_is_delta_compressor(d, kfrac, seed):
+    """Lemma 1: ||T_k(x) - x||^2 <= (1 - k/d) ||x||^2."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    k = max(1, int(kfrac * d))
+    p = exact_topk(x, k)
+    resid = float(jnp.sum((p.densify() - x) ** 2))
+    bound = (1 - k / d) * float(jnp.sum(x**2)) + 1e-5
+    assert resid <= bound
+
+
+@given(
+    d=st.integers(10, 2000),
+    bs=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=30, deadline=None)
+def test_block_topk_delta_compressor_and_indices(d, bs, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    k = max(1, d // 20)
+    p = block_topk(x, k, block_size=bs)
+    assert int(p.indices.max()) < d and int(p.indices.min()) >= 0
+    resid = float(jnp.sum((p.densify() - x) ** 2))
+    assert resid <= float(jnp.sum(x**2)) + 1e-5
+    # block top-k selects at least k elements overall (per-block rounding up)
+    nz = int(jnp.sum(p.densify() != 0))
+    assert nz >= min(k, nz)
+
+
+def test_random_k_unbiased():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=64).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(0), 600)
+    acc = jnp.zeros_like(x)
+    for kk in keys:
+        acc = acc + random_k(x, 8, kk).densify()
+    est = acc / len(keys)
+    np.testing.assert_allclose(np.asarray(est), np.asarray(x), atol=0.35)
+
+
+@pytest.mark.parametrize(
+    "shape,sharded_axis,axis_size",
+    [
+        ((64, 128), 1, 4),        # sharded last dim
+        ((8, 32, 256), 1, 4),     # interior sharded
+        ((100, 60), None, 1),     # unsharded
+        ((7, 13), 0, 1),
+    ],
+)
+def test_blocked_view_alignment(shape, sharded_axis, axis_size):
+    blocked = blocked_view_shape(shape, sharded_axis, 64, axis_size)
+    assert np.prod(blocked) == np.prod(shape)
+    if sharded_axis is not None and sharded_axis == len(shape) - 1:
+        # nbc must be a multiple of the axis size (shard-aligned blocks)
+        assert blocked[-2] % axis_size == 0
+
+
+@given(
+    rows=st.integers(1, 8),
+    bc=st.sampled_from([8, 32, 128]),
+    kb=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=30, deadline=None)
+def test_blocked_topk_matches_lax_topk(rows, bc, kb, seed):
+    """The iterative masked-argmax selection == lax.top_k per block."""
+    kb = min(kb, bc)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, 4, bc)).astype(np.float32))
+    p = blocked_topk(x, kb)
+    ref_v, ref_i = jax.lax.top_k(jnp.abs(x), kb)
+    got_v = np.sort(np.abs(np.asarray(p.values)), axis=-1)
+    exp_v = np.sort(np.asarray(ref_v), axis=-1)
+    np.testing.assert_allclose(got_v, exp_v, rtol=1e-6, atol=1e-6)
+    # densify puts selected values back in place
+    dense = np.asarray(p.densify().reshape(x.shape))
+    mask = dense != 0
+    np.testing.assert_allclose(dense[mask], np.asarray(x)[mask], rtol=1e-6)
