@@ -1,0 +1,24 @@
+"""Distribution layer: mesh strategies, sharding rules, pipeline parallelism.
+
+Layering (bottom-up; see README "repro.dist layering"):
+
+- ``strategy``: which mesh axes are SASG workers vs auto FSDP/TP axes, and
+  the flat / hierarchical / plain selection policy (``choose_strategy``).
+- ``sharding``: role-aware PartitionSpec trees for params / batches / KV
+  caches, consumed by the train step, the serve engine, and the dry-runs.
+- ``pipeline``: GPipe-style microbatch pipeline parallelism over a manual
+  stage axis, independent of the SASG exchange.
+"""
+from .strategy import Strategy, choose_strategy
+from .sharding import batch_specs, cache_specs, param_specs
+from .pipeline import build_pipelined_forward, pipeline_apply
+
+__all__ = [
+    "Strategy",
+    "choose_strategy",
+    "param_specs",
+    "batch_specs",
+    "cache_specs",
+    "build_pipelined_forward",
+    "pipeline_apply",
+]

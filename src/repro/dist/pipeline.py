@@ -1,0 +1,72 @@
+"""GPipe-style microbatch pipeline parallelism over a mesh stage axis.
+
+The layer stack is split into S contiguous stages along a (manual) mesh
+axis; microbatches stream through the stages with activations handed to the
+next stage by a ring ``ppermute`` each tick. After ``n_micro + S - 1`` ticks
+every microbatch has traversed every stage; the last stage's outputs are
+psum-broadcast so the result is replicated over the stage axis (out_specs
+``P()``), numerically identical to applying all ``S * layers_per_stage``
+layers sequentially (tests/test_pipeline.py).
+
+This is orthogonal to the SASG exchange: pipeline_apply runs inside a
+shard_map whose manual set contains the stage axis, and composes with auto
+TP axes the same way the worker exchange does.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def build_pipelined_forward(layer_fn: Callable, layers_per_stage: int,
+                            axis: str = "stage") -> Callable:
+    """Fold ``layers_per_stage`` applications of ``layer_fn`` into one stage.
+
+    ``layer_fn(w, h) -> h`` consumes one layer's params; the returned
+    ``stage_fn(wseg, h)`` consumes the stage's params stacked on a leading
+    ``layers_per_stage`` dim (array or pytree of arrays). ``axis`` names the
+    stage axis for documentation/symmetry with ``pipeline_apply``.
+    """
+
+    def stage_fn(wseg, h):
+        for l in range(layers_per_stage):
+            h = layer_fn(jax.tree.map(lambda w: w[l], wseg), h)
+        return h
+
+    return stage_fn
+
+
+def pipeline_apply(stage_fn: Callable, wseg, micro_x: jax.Array,
+                   axis: str = "stage") -> jax.Array:
+    """Run microbatches through the stage pipeline. Call inside shard_map.
+
+    ``wseg`` is this stage's params (stage-stacked dim already stripped);
+    ``micro_x`` is the full (n_micro, mb, ...) microbatch array, replicated
+    over the stage axis. Returns the fully-processed (n_micro, mb, ...)
+    outputs, replicated over the stage axis.
+    """
+    n_micro = micro_x.shape[0]
+    S = jax.lax.psum(1, axis)        # static axis size (concrete-operand psum)
+    idx = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % S) for i in range(S)]
+    first = idx == 0
+    last = idx == S - 1
+
+    carry = jnp.zeros_like(micro_x[0])
+    out = jnp.zeros_like(micro_x)
+    for t in range(n_micro + S - 1):
+        # stage 0 feeds fresh microbatches (re-feeding the final one during
+        # drain ticks — those results never land in ``out``); later stages
+        # consume what the ring delivered last tick.
+        x_in = jnp.where(first, micro_x[min(t, n_micro - 1)], carry)
+        y = stage_fn(wseg, x_in)
+        done = t - (S - 1)           # microbatch completing at this tick
+        if 0 <= done < n_micro:
+            out = out.at[done].set(y)
+        carry = jax.lax.ppermute(y, axis, perm)
+
+    # only the last stage holds finished microbatches; psum replicates them
+    out = jnp.where(last, out, jnp.zeros_like(out))
+    return jax.lax.psum(out, axis)

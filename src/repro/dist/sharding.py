@@ -1,0 +1,130 @@
+"""Role-aware PartitionSpec assignment for FSDP x TP layouts.
+
+The model zoo stores weights as nested dicts with conventional leaf names
+(layers.py "Conventions"), so specs are assigned from the leaf's *path*:
+
+- column-parallel (input dim -> fsdp, output dim -> tp): wq/wk/wv, w_gate/
+  w_up, w_in, lm_head, and any unrecognized >=2-D leaf (the safe default);
+- row-parallel (input dim -> tp, output dim -> fsdp): wo, w_down, w_out;
+- vocab-parallel embedding: embed -> (tp, fsdp);
+- expert-parallel MoE: experts_* shard the expert dim over tp when
+  divisible, otherwise fall back to TP over d_expert;
+- 1-D leaves (norm scales, biases, gates) are replicated.
+
+A dim is only sharded when its size divides the mesh axis size; stacked
+leading layer axes (the scan-over-units layout) are padded with None. All
+three entry points accept either concrete arrays or ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+_ROW_PARALLEL = {"wo", "w_down", "w_out"}
+
+# Leaves whose natural (unstacked) form is a vector — norm scales, biases,
+# per-head gates. They pick up leading layer dims under the scan-over-units
+# layout, so rank alone cannot identify them; replicate by name.
+_VECTOR = {"scale", "bias", "b", "lam", "a_log", "dt_bias", "d_skip", "norm_scale"}
+
+
+def _axis_size(mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(_axis_size(mesh, a) for a in axis)
+    return mesh.shape[axis]
+
+
+def _fit(mesh, dim: int, axis: Axis):
+    """``axis`` if ``dim`` divides evenly over it, else None (no sharding)."""
+    if axis is None:
+        return None
+    size = _axis_size(mesh, axis)
+    if size <= 1 or dim % size != 0:
+        return None
+    return tuple(axis) if isinstance(axis, list) else axis
+
+
+def _path_keys(path) -> list:
+    return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+
+
+def param_specs(params, mesh, fsdp_axis: Axis, tp_axis: Axis):
+    """PartitionSpec tree for a parameter pytree (same structure)."""
+
+    def leaf(path, x):
+        shape = tuple(x.shape)
+        ndim = len(shape)
+        key = _path_keys(path)[-1]
+        if ndim <= 1 or key in _VECTOR:
+            return P()  # norm scales / biases / per-head gates: replicated
+
+        if key.startswith("experts_") and ndim >= 3:
+            e, a, b = shape[-3:]
+            if _fit(mesh, e, tp_axis) is not None:
+                # expert-parallel: expert dim over tp, d_model dim over fsdp
+                if key == "experts_down":
+                    spec3 = (tp_axis, None, _fit(mesh, b, fsdp_axis))
+                else:
+                    spec3 = (tp_axis, _fit(mesh, a, fsdp_axis), None)
+            elif key == "experts_down":
+                # fallback: TP over d_expert (row-parallel within the expert)
+                spec3 = (None, _fit(mesh, a, tp_axis), _fit(mesh, b, fsdp_axis))
+            else:
+                spec3 = (None, _fit(mesh, a, fsdp_axis), _fit(mesh, b, tp_axis))
+            return P(*([None] * (ndim - 3)), *spec3)
+
+        if key == "embed":
+            # vocab-parallel embedding (logits reduce over tp at the head)
+            return P(_fit(mesh, shape[0], tp_axis), _fit(mesh, shape[1], fsdp_axis))
+
+        if key in _ROW_PARALLEL:
+            d2 = (_fit(mesh, shape[-2], tp_axis), _fit(mesh, shape[-1], fsdp_axis))
+        else:
+            d2 = (_fit(mesh, shape[-2], fsdp_axis), _fit(mesh, shape[-1], tp_axis))
+        return P(*([None] * (ndim - 2)), *d2)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def batch_specs(batch, mesh, data_axis: Axis):
+    """Leading (batch) dim over the data axes; everything else replicated."""
+
+    def leaf(x):
+        shape = tuple(x.shape)
+        if not shape:
+            return P()
+        return P(_fit(mesh, shape[0], data_axis), *([None] * (len(shape) - 1)))
+
+    return jax.tree.map(leaf, batch)
+
+
+def cache_specs(cache, mesh, data_axis: Axis, tp_axis: Axis):
+    """Decode-cache specs: batch dim over data, KV head dim over tp.
+
+    Handles both the scan-over-units stacked layout (leading n_units dim
+    under the "unit" subtree) and flat per-layer ("rem") states. Ring-buffer
+    position tables ("pos") are tiny and stay replicated.
+    """
+
+    def leaf(path, x):
+        keys = _path_keys(path)
+        key = keys[-1]
+        shape = tuple(x.shape)
+        ndim = len(shape)
+        b = 1 if "unit" in keys else 0  # stacked leading layer axis
+        if key == "pos" or ndim <= b + 1:
+            return P()
+        entries = [None] * ndim
+        entries[b] = _fit(mesh, shape[b], data_axis)
+        if key in ("k", "v") and ndim - b >= 3:
+            entries[-2] = _fit(mesh, shape[-2], tp_axis)  # (B, S, H, Dh) heads
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)

@@ -1,0 +1,131 @@
+"""Mesh execution strategies for the SASG exchange (DESIGN.md §2/§6).
+
+A ``Strategy`` names the role of every mesh axis for one training run:
+
+- ``upload_axes``: manual shard_map axes whose slices are the SASG workers —
+  each slice computes its own gradient, runs the LASG send/skip rule, and
+  contributes one (possibly cached) compressed upload per step.
+- ``grad_axes``: axes the *global batch* is split over. Superset of
+  ``upload_axes``; the extra axes (in-pod data parallelism) stay auto, so
+  the per-worker gradient mean over them is the automatic backward psum.
+- ``fsdp_axis`` / ``tp_axis``: auto axes for parameter sharding
+  (``dist.sharding.param_specs``).
+- ``data_axis``: the auto data axis *inside* the worker region (None when
+  workers are the finest data split).
+
+Three strategies:
+
+- ``"flat"``: every data-axis slice is a worker (the paper's M-worker
+  setting). Params are worker-replicated, TP-sharded over ``tp_axis``.
+- ``"hierarchical"``: on 3-D pod meshes each pod is one worker; the in-pod
+  ``data`` axis stays auto. TP-only parameter sharding: FSDP over an auto
+  axis *inside* the manual pod region trips an XLA SPMD partitioner CHECK
+  (pinned in ``tests/test_known_limits.py``), so ``fsdp_axis`` is forced
+  ``None`` until the partitioner is fixed.
+- ``"plain"``: no shard_map — standard auto-SPMD data parallelism. Used as
+  the non-SASG baseline and as the fallback whenever one worker replica of
+  the parameters (plus SASG worker state) cannot fit beside the TP shards.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple, Union
+
+Axis = Union[str, Tuple[str, ...], None]
+
+# Per-worker replica cost model for the fit check: each SASG worker holds
+# the fp32 parameters plus error-feedback and stale-parameter buffers of the
+# same footprint — ~3x params_bytes, sharded only over the TP axis.
+REPLICA_OVERHEAD = 3.0
+
+# Default per-device budget for that replica. Matches HBM_PER_CHIP in
+# launch/mesh.py (TPU v5e, 16 GiB); kept local so dist never imports upward.
+WORKER_REPLICA_BUDGET_BYTES = 16 * 2**30
+
+
+@dataclass(frozen=True)
+class Strategy:
+    name: str                      # "flat" | "hierarchical" | "plain"
+    upload_axes: Tuple[str, ...]   # manual worker axes (empty for plain)
+    grad_axes: Tuple[str, ...]     # axes the global batch is split over
+    fsdp_axis: Axis
+    data_axis: Axis                # auto data axis inside the worker region
+    tp_axis: Axis
+    num_workers: int
+
+    @property
+    def uses_shard_map(self) -> bool:
+        return bool(self.upload_axes)
+
+    @property
+    def worker_axes(self) -> Tuple[str, ...]:
+        return tuple(self.upload_axes)
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return tuple(self.grad_axes)
+
+    @property
+    def inner_dp(self) -> Optional[str]:
+        """The auto data axis inside the worker region, if any."""
+        if not self.uses_shard_map or self.data_axis is None:
+            return None
+        if self.data_axis in self.upload_axes:
+            return None
+        return self.data_axis if isinstance(self.data_axis, str) else None
+
+
+def worker_replication_fits(
+    params_bytes: Optional[int],
+    tp_size: int,
+    budget_bytes: int = WORKER_REPLICA_BUDGET_BYTES,
+) -> bool:
+    """Can one SASG worker replica live beside its TP shard? (<= is a fit:
+    the budget is the per-device ceiling, so the boundary value still fits.)
+    """
+    if params_bytes is None:
+        return True
+    return REPLICA_OVERHEAD * params_bytes / max(tp_size, 1) <= budget_bytes
+
+
+def choose_strategy(
+    mesh,
+    sasg_enabled: bool = True,
+    params_bytes: Optional[int] = None,
+    replica_budget_bytes: int = WORKER_REPLICA_BUDGET_BYTES,
+) -> Strategy:
+    """Pick the execution strategy for a mesh.
+
+    - 3-D pod meshes -> "hierarchical" (pod = worker, TP-only params — the
+      documented FSDP-inside-manual-pod workaround);
+    - 2-D / 1-D data meshes -> "flat" (each data slice is a worker);
+    - SASG disabled, or ``params_bytes`` too large to worker-replicate ->
+      "plain" (auto-SPMD DP, FSDP over every data-like axis).
+    """
+    names = tuple(mesh.axis_names)
+    sizes = dict(zip(names, mesh.devices.shape))
+    tp = "model" if "model" in sizes else None
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    if not dp:  # degenerate (TP-only) mesh: nothing to carve workers from
+        return Strategy("plain", (), (), None, None, tp, 1)
+
+    dp_degree = math.prod(sizes[a] for a in dp)
+    fits = worker_replication_fits(
+        params_bytes, sizes.get(tp, 1) if tp else 1, replica_budget_bytes
+    )
+    if not sasg_enabled or not fits:
+        fsdp = dp if len(dp) > 1 else dp[0]
+        return Strategy("plain", (), dp, fsdp, fsdp, tp, dp_degree)
+
+    if "pod" in sizes and "data" in sizes:
+        # TP-only hierarchical: fsdp_axis must stay None while the XLA SPMD
+        # partitioner rejects FSDP inside manual-pod regions
+        # (tests/test_known_limits.py::test_fsdp_inside_manual_podaxis...).
+        return Strategy(
+            "hierarchical", ("pod",), ("pod", "data"), None, "data", tp,
+            sizes["pod"],
+        )
+
+    wa = dp[0]
+    return Strategy("flat", (wa,), (wa,), None, None, tp, sizes[wa])

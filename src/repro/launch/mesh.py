@@ -11,30 +11,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     import numpy as np
 
     import jax
-    from jax.sharding import AxisType, Mesh
+
+    from repro import compat
 
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
     devices = jax.devices()
-    if len(devices) == n:
-        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
     if len(devices) < n:
         raise RuntimeError(
             f"need {n} devices for mesh {shape}, have {len(devices)} — set "
             "XLA_FLAGS=--xla_force_host_platform_device_count before importing jax"
         )
-    return Mesh(
-        np.asarray(devices[:n]).reshape(shape), axes,
-        axis_types=(AxisType.Auto,) * len(shape),
-    )
+    return compat.make_mesh(shape, axes, devices=devices[:n])
 
 
 def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
-    import jax
-    from jax.sharding import AxisType
+    from repro import compat
 
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return compat.make_mesh(shape, axes)
 
 
 def required_device_count(multi_pod: bool) -> int:

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import metrics as CM
 from repro.core.sasg import SASGConfig, build_exchange, update_global_state
 from repro.core.types import (
@@ -89,6 +90,22 @@ def build_train_step(
     optimizer: Optional[GradientTransformation] = None,
     donate: bool = True,
 ) -> BuiltStep:
+    if (
+        strategy.uses_shard_map
+        and strategy.fsdp_axis is not None
+        and not compat.PARTIAL_AUTO_SHARD_MAP
+    ):
+        # Old JAX only: the compat full-manual degrade would silently
+        # un-shard the params instead of reproducing the partitioner CHECK,
+        # so refuse eagerly. On partial-auto-capable JAX the config reaches
+        # XLA directly and tests/test_known_limits.py keeps probing whether
+        # the CHECK is fixed (at which point hierarchical FSDP can return).
+        raise NotImplementedError(
+            f"FSDP over {strategy.fsdp_axis!r} inside the manual worker "
+            "region hits an XLA SPMD partitioner CHECK "
+            "(tests/test_known_limits.py); hierarchical SASG is TP-only — "
+            "use fsdp_axis=None"
+        )
     fold_lr = sasg_cfg.fold_lr and strategy.uses_shard_map
     M = strategy.num_workers
     waxes = strategy.worker_axes
@@ -206,7 +223,7 @@ def build_train_step(
 
         def worker_fn(params, batch, wstate, gstate, lr, key):
             wstate = strip_worker_axis(wstate)
-            if strategy.inner_dp:
+            if strategy.inner_dp and compat.PARTIAL_AUTO_SHARD_MAP:
                 batch = jax.tree.map(
                     lambda x: jax.lax.with_sharding_constraint(
                         x, P(strategy.inner_dp, *([None] * (x.ndim - 1)))
@@ -232,10 +249,11 @@ def build_train_step(
                         out.append(entry)
                 return P(*out)
 
-            update = jax.tree.map(
-                lambda u, s: jax.lax.with_sharding_constraint(u, _strip_manual(s)),
-                update, pspecs,
-            )
+            if compat.PARTIAL_AUTO_SHARD_MAP:
+                update = jax.tree.map(
+                    lambda u, s: jax.lax.with_sharding_constraint(u, _strip_manual(s)),
+                    update, pspecs,
+                )
             return update, add_worker_axis(new_wstate), add_worker_axis(info)
 
         def step(state: TrainState, batch):

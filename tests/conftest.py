@@ -2,6 +2,7 @@
 benches must see the real 1-CPU environment; only dryrun.py forces 512) —
 tests that need a mesh spawn fake devices in their own module via an
 env-guarded subprocess or use the 8-device modules below."""
+import importlib.util
 import os
 import sys
 
@@ -17,20 +18,47 @@ import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
 
+import repro.compat  # noqa: E402,F401  (installs jax.shard_map/axis_size shims on older JAX)
+
 import pytest  # noqa: E402
+
+# hypothesis fallback: the test image may not ship hypothesis (and cannot
+# install it); load the deterministic stub so the property-test modules
+# still collect and run. The real package always wins when present.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py")
+    )
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run tests marked slow (multi-minute known-limits XLA compiles)",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow known-limits compile; pass --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
 
 
 @pytest.fixture(scope="session")
 def mesh2d():
-    from jax.sharding import AxisType
-
-    return jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    # compat.make_mesh guards the AxisType import: older JAX builds the mesh
+    # without axis_types, newer JAX gets Auto axes.
+    return repro.compat.make_mesh((4, 2), ("data", "model"))
 
 
 @pytest.fixture(scope="session")
 def mesh3d():
-    from jax.sharding import AxisType
-
-    return jax.make_mesh(
-        (2, 2, 2), ("pod", "data", "model"), axis_types=(AxisType.Auto,) * 3
-    )
+    return repro.compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
