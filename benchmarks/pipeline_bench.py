@@ -1,0 +1,94 @@
+"""Pipelined-vs-flat SASG step benchmark (BENCH_pipeline.json).
+
+Builds the smoke-sized cnn_cifar SASG step twice — flat workers, and
+workers x GPipe stages — on fake CPU devices, times jitted steps, and
+records step time plus both exchange traffic views (SASG upload bits and
+the pipeline ring bits from core.metrics.PipelineCommModel). Seeds the perf
+trajectory for the pipeline composition; run via
+
+  PYTHONPATH=src python -m benchmarks.run --stages 2
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+
+def run(stages: int = 2, steps: int = 5, out_path: str = "BENCH_pipeline.json") -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.compat
+    from repro.configs import get_config
+    from repro.core import sasg_config
+    from repro.dist.strategy import choose_strategy
+    from repro.models import build
+    from repro.optim import constant
+    from repro.train import build_train_step
+
+    cfg = dataclasses.replace(get_config("cnn_cifar"), d_model=16)
+    model = build(cfg)
+    scfg = sasg_config(k_ratio=0.05, max_delay=4)
+
+    rng = np.random.default_rng(0)
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(8, 32, 32, 3)).astype(np.float32)),
+        "labels": jnp.asarray(rng.integers(0, 10, size=(8,)).astype(np.int32)),
+    }
+
+    def bench(mesh, strategy):
+        built = build_train_step(model, scfg, mesh, strategy, constant(0.05))
+        state = built.init(jax.random.PRNGKey(0))
+        state, mets = built.jit_step(state, batch)      # warmup / compile
+        jax.block_until_ready(state.params)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, mets = built.jit_step(state, batch)
+        jax.block_until_ready(state.params)
+        dt = (time.perf_counter() - t0) / steps
+        return built, {k: float(v) for k, v in mets.items()}, dt
+
+    mesh_flat = repro.compat.make_mesh((2,), ("data",))
+    s_flat = choose_strategy(mesh_flat, sasg_enabled=True)
+    bf, mets_f, t_flat = bench(mesh_flat, s_flat)
+
+    mesh_pipe = repro.compat.make_mesh((2, stages), ("data", "stage"))
+    s_pipe = choose_strategy(
+        mesh_pipe, sasg_enabled=True, pipeline_stages=stages,
+        trunk_layers=model.pipeline.n_layers,
+    )
+    if not s_pipe.pipelined:
+        raise ValueError(
+            f"stages={stages} does not divide the cnn trunk depth "
+            f"{model.pipeline.n_layers}"
+        )
+    bp, mets_p, t_pipe = bench(mesh_pipe, s_pipe)
+
+    record = {
+        "model": "cnn_cifar(d_model=16)",
+        "stages": stages,
+        "steps_timed": steps,
+        "flat": {
+            "mesh": {"data": 2},
+            "step_time_s": t_flat,
+            "bits_wire_per_upload": bf.bits_wire,
+            "bits_paper_per_upload": bf.bits_paper,
+        },
+        "pipelined": {
+            "mesh": {"data": 2, "stage": stages},
+            "step_time_s": t_pipe,
+            "bits_wire_per_upload": bp.bits_wire,
+            "bits_paper_per_upload": bp.bits_paper,
+            "pipe_bits_per_step": mets_p.get("pipe_bits_step", 0.0),
+        },
+        "note": "CPU fake-device timing: compares relative step cost only; "
+                "upload bits are identical by construction "
+                "(tests/test_pipeline_sasg.py), the pipeline adds ring bits.",
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[pipeline_bench] flat {t_flat*1e3:.1f} ms/step, "
+          f"{stages}-stage {t_pipe*1e3:.1f} ms/step -> {out_path}")
+    return {"pipeline": record}

@@ -1,9 +1,11 @@
 """Benchmark harness entrypoint: one benchmark per paper table/figure plus
-the roofline collector.
+the roofline collector and the pipeline composition bench.
 
   PYTHONPATH=src python -m benchmarks.run [--full]
+  PYTHONPATH=src python -m benchmarks.run --stages 2   # BENCH_pipeline.json
 """
 import argparse
+import os
 import sys
 import time
 
@@ -12,9 +14,26 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="also run the CNN/CIFAR-scale comparison (slower)")
+    ap.add_argument("--stages", type=int, default=0,
+                    help="run ONLY the pipelined-vs-flat step bench with this "
+                         "many GPipe stages; writes BENCH_pipeline.json")
     args = ap.parse_args()
 
     t0 = time.time()
+    if args.stages:
+        # fake devices for the worker x stage mesh; must precede jax import,
+        # and must be APPENDED — XLA flag parsing is last-occurrence-wins, so
+        # appending lets this computed count override any pre-existing one
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={max(2 * args.stages, 4)}"
+        )
+        from benchmarks import pipeline_bench
+
+        pipeline_bench.run(stages=args.stages)
+        print(f"benchmarks.run complete in {time.time()-t0:.1f}s")
+        return 0
+
     from benchmarks import (fig_curves, roofline, table1_comm_model,
                             table2_rounds_bits, table3_comm_time)
 

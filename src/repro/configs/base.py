@@ -72,6 +72,10 @@ class ModelConfig:
     norm_eps: float = 1e-5
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
+    # preferred GPipe stage count when the run's mesh carries a stage axis;
+    # 1 = no pipelining. Must divide the model's homogeneous trunk depth
+    # (choose_strategy degrades the knob when it does not fit the mesh).
+    pipeline_stages: int = 1
     # sub-quadratic? (drives long_500k applicability)
     source: str = ""
 
@@ -91,9 +95,13 @@ class ModelConfig:
         return self.attn_pattern[i % len(self.attn_pattern)]
 
     def reduced(self) -> "ModelConfig":
-        """Smoke-test variant: same family/wiring, tiny dims."""
+        """Smoke-test variant: same family/wiring, tiny dims. The pipeline
+        preference is clamped to the reduced depth so the stage knob still
+        divides the (now much shallower) trunk."""
         kw = dict(
             n_layers=min(self.n_layers, 2 * max(1, len(self.attn_pattern))),
+            pipeline_stages=min(self.pipeline_stages,
+                                2 * max(1, len(self.attn_pattern))),
             d_model=128,
             n_heads=4,
             n_kv_heads=min(self.n_kv_heads, 2) or 1,

@@ -9,5 +9,8 @@ CONFIG = register(ModelConfig(
     n_layers=6, d_model=64, n_heads=0, n_kv_heads=0, d_ff=0,
     vocab_size=10,
     param_dtype="float32", compute_dtype="float32",
+    # smoke-sized pipeline config: the two full-width stage-1 blocks are the
+    # homogeneous trunk (paper_nets.CNN_TRUNK_DEPTH), one block per stage
+    pipeline_stages=2,
     source="paper §5.1 (ResNet18/CIFAR, compacted)",
 ))

@@ -61,6 +61,41 @@ def accumulate(
 
 
 @dataclass(frozen=True)
+class PipelineCommModel:
+    """Static per-step pipeline (stage-axis) traffic accounting.
+
+    Orthogonal to the SASG upload counters above: the GPipe ring moves one
+    microbatch activation per stage per tick over ``n_micro + stages - 1``
+    ticks (dist/pipeline.py), every step, regardless of the send/skip
+    decisions. Surfaced by the train step as ``pipe_bits_step`` /
+    ``pipe_bits_total`` metrics and by ``benchmarks/run.py --stages``.
+    """
+
+    stages: int
+    n_micro: int
+    act_elems: int              # elements in ONE microbatch activation
+    bits_per_elem: int = 32     # ring payload width (16 for bf16 compute)
+
+    @property
+    def ticks(self) -> int:
+        return self.n_micro + self.stages - 1
+
+    def bits_per_stage_per_step(self) -> float:
+        """ppermute traffic one stage emits per training step."""
+        return float(self.ticks) * self.act_elems * self.bits_per_elem
+
+    def bits_per_step(self) -> float:
+        """Total ring traffic per step: every stage's per-tick ppermute
+        sends, plus the final psum that replicates the ``n_micro`` finished
+        microbatch outputs to each stage (n_micro activation hops per
+        stage)."""
+        return self.stages * (
+            self.bits_per_stage_per_step()
+            + self.n_micro * self.act_elems * self.bits_per_elem
+        )
+
+
+@dataclass(frozen=True)
 class LinkModel:
     """Analytic transport-time model (paper Table 3 / Fig 5-6 setting).
 

@@ -7,11 +7,18 @@ Layering (bottom-up; see README "repro.dist layering"):
 - ``sharding``: role-aware PartitionSpec trees for params / batches / KV
   caches, consumed by the train step, the serve engine, and the dry-runs.
 - ``pipeline``: GPipe-style microbatch pipeline parallelism over a manual
-  stage axis, independent of the SASG exchange.
+  stage axis, composed with the SASG exchange by ``train/step.py`` through
+  ``build_pipelined_vag`` (strategy -> sharding -> pipeline -> step).
 """
 from .strategy import Strategy, choose_strategy
 from .sharding import batch_specs, cache_specs, param_specs
-from .pipeline import build_pipelined_forward, pipeline_apply
+from .pipeline import (
+    build_pipelined_forward,
+    build_pipelined_loss,
+    build_pipelined_vag,
+    pipeline_apply,
+    resolve_microbatches,
+)
 
 __all__ = [
     "Strategy",
@@ -20,5 +27,8 @@ __all__ = [
     "batch_specs",
     "cache_specs",
     "build_pipelined_forward",
+    "build_pipelined_loss",
+    "build_pipelined_vag",
     "pipeline_apply",
+    "resolve_microbatches",
 ]

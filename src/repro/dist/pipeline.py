@@ -4,13 +4,25 @@ The layer stack is split into S contiguous stages along a (manual) mesh
 axis; microbatches stream through the stages with activations handed to the
 next stage by a ring ``ppermute`` each tick. After ``n_micro + S - 1`` ticks
 every microbatch has traversed every stage; the last stage's outputs are
-psum-broadcast so the result is replicated over the stage axis (out_specs
-``P()``), numerically identical to applying all ``S * layers_per_stage``
-layers sequentially (tests/test_pipeline.py).
+psum-broadcast so the result is replicated over the stage axis, numerically
+identical to applying all ``S * layers_per_stage`` layers sequentially —
+forward and backward both, covered by ``tests/test_pipeline.py`` (2- and
+4-stage, values and grads).
 
-This is orthogonal to the SASG exchange: pipeline_apply runs inside a
-shard_map whose manual set contains the stage axis, and composes with auto
-TP axes the same way the worker exchange does.
+Composition with the SASG exchange (strategy -> sharding -> pipeline ->
+step): ``train/step.py`` places the stage axis in the shard_map manual set
+next to the worker axes, hands each stage its slice of the model's
+stage-stacked trunk params (``dist.sharding.param_specs`` with
+``stage_axis``/``trunk_paths``), and swaps the exchange's ``grad_fn`` for
+``build_pipelined_vag`` — so the fresh gradient AND the stale-params
+auxiliary gradient of the LASG rule (paper eq. 6/7) run through the same
+pipelined forward/backward, preserving the same-minibatch variance
+cancellation. The returned gradient is the FULL tree replicated over the
+stage axis (trunk all-gathered, the rest psum-combined via the stage-0 loss
+mask), so the selection rule, error feedback, top-k compression, and the
+worker-axis exchange are bit-identical to the non-pipelined step
+(``tests/test_pipeline_sasg.py``). Auto TP axes compose transparently, as
+in the worker exchange.
 """
 from __future__ import annotations
 
@@ -70,3 +82,90 @@ def pipeline_apply(stage_fn: Callable, wseg, micro_x: jax.Array,
     # only the last stage holds finished microbatches; psum replicates them
     out = jnp.where(last, out, jnp.zeros_like(out))
     return jax.lax.psum(out, axis)
+
+
+# ---------------------------------------------------------------------------
+# composition with the SASG exchange (models.model.PipelineDef consumers)
+# ---------------------------------------------------------------------------
+
+def tree_get(tree, path: tuple):
+    """Fetch a subtree by a (dict-key / sequence-index) path."""
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def resolve_microbatches(batch_size: int, requested: int) -> int:
+    """Largest microbatch count <= ``requested`` that divides the batch
+    (the LASG probe sub-batch may not divide the configured count; 1 always
+    works). Static ints only — runs at trace time."""
+    for nm in range(min(max(requested, 1), batch_size), 1, -1):
+        if batch_size % nm == 0:
+            return nm
+    return 1
+
+
+def build_pipelined_loss(
+    pdef, axis: str = "stage", microbatches: int = 0
+) -> Callable:
+    """Per-device loss for use inside a shard_map whose manual set contains
+    ``axis``. ``params`` carries the LOCAL trunk slice (stage-sharded stacked
+    layer dim); everything else is stage-replicated.
+
+    The returned scalar is masked to stage 0. That mask makes the gradient
+    stage-combine uniform (see ``build_pipelined_vag``): non-trunk params
+    contribute to the device loss only on stage 0 (prepare feeds microbatches
+    only through stage 0's ``first`` branch; finish is explicitly masked), so
+    a plain psum over the stage axis reconstructs their true gradient — and
+    the psum *transpose* inside ``pipeline_apply`` still broadcasts stage 0's
+    output cotangent to the last stage, so the reverse ring delivers each
+    stage its trunk slice's true gradient.
+    """
+
+    def loss_fn(params, batch):
+        wseg = tree_get(params, pdef.trunk_path)
+        h = pdef.prepare(params, batch)
+        b = h.shape[0]
+        n_micro = resolve_microbatches(
+            b, microbatches or jax.lax.psum(1, axis)
+        )
+        micro = h.reshape((n_micro, b // n_micro) + h.shape[1:])
+        layers_local = jax.tree.leaves(wseg)[0].shape[0]
+        stage_fn = build_pipelined_forward(pdef.layer_fn, layers_local, axis)
+        out = pipeline_apply(stage_fn, wseg, micro, axis)
+        h = out.reshape((b,) + out.shape[2:])
+        loss = pdef.finish(params, h, batch)
+        return jnp.where(jax.lax.axis_index(axis) == 0, loss, 0.0)
+
+    return loss_fn
+
+
+def build_pipelined_vag(
+    pdef, axis: str = "stage", microbatches: int = 0
+) -> Callable:
+    """Pipelined drop-in for ``jax.value_and_grad(model.loss_fn)`` inside the
+    worker shard_map region: returns the FULL (loss, grads) replicated over
+    the stage axis, with the trunk gradient all-gathered back to its complete
+    stacked form. The SASG exchange (selection rule, error feedback, top-k,
+    worker all-gather) then sees exactly what the non-pipelined step sees —
+    both the fresh and the stale-params auxiliary gradient call this same
+    function, preserving the paper's eq. 6/7 pairing."""
+    from repro.dist.sharding import _path_keys
+
+    loss_fn = build_pipelined_loss(pdef, axis, microbatches)
+    vag = jax.value_and_grad(loss_fn)
+    prefix = tuple(str(k) for k in pdef.trunk_path)
+
+    def combine(path, x):
+        keys = _path_keys(path)
+        if keys[: len(prefix)] == list(prefix):
+            # per-stage trunk slice -> full stacked trunk, replicated
+            return jax.lax.all_gather(x, axis, axis=0, tiled=True)
+        # stage-0-masked partial grad -> true grad (zero on stages != 0)
+        return jax.lax.psum(x, axis)
+
+    def pipelined_vag(params, batch):
+        loss, g = vag(params, batch)
+        return jax.lax.psum(loss, axis), jax.tree_util.tree_map_with_path(combine, g)
+
+    return pipelined_vag

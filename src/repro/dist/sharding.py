@@ -14,6 +14,14 @@ The model zoo stores weights as nested dicts with conventional leaf names
 A dim is only sharded when its size divides the mesh axis size; stacked
 leading layer axes (the scan-over-units layout) are padded with None. All
 three entry points accept either concrete arrays or ShapeDtypeStructs.
+
+Pipeline composition: leaves under a *trunk path* (``Model.pipeline``'s
+homogeneous stage-stacked layer stack, leading dim = trunk depth) take the
+``stage_axis`` on that stacked dim — each pipeline stage owns a contiguous
+block of layers — while their trailing dims keep the normal role-aware
+FSDP x TP assignment. Everything outside the trunk ignores ``stage_axis``
+(replicated over stages), matching the stage-masked gradient combine in
+``dist.pipeline``.
 """
 from __future__ import annotations
 
@@ -55,15 +63,22 @@ def _path_keys(path) -> list:
     return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
 
 
-def param_specs(params, mesh, fsdp_axis: Axis, tp_axis: Axis):
-    """PartitionSpec tree for a parameter pytree (same structure)."""
+def param_specs(params, mesh, fsdp_axis: Axis, tp_axis: Axis,
+                stage_axis: Axis = None, trunk_paths: Tuple = ()):
+    """PartitionSpec tree for a parameter pytree (same structure).
 
-    def leaf(path, x):
-        shape = tuple(x.shape)
+    ``trunk_paths`` is a tuple of leaf-path prefixes (tuples of path keys as
+    strings) naming stage-stacked trunk subtrees; when ``stage_axis`` is set,
+    their leaves shard the stacked leading layer dim over it (module
+    docstring "Pipeline composition").
+    """
+    prefixes = tuple(tuple(str(k) for k in p) for p in trunk_paths)
+
+    def role_entries(key, shape) -> tuple:
+        """Role-aware entries for one (possibly trunk-stripped) leaf shape."""
         ndim = len(shape)
-        key = _path_keys(path)[-1]
         if ndim <= 1 or key in _VECTOR:
-            return P()  # norm scales / biases / per-head gates: replicated
+            return (None,) * ndim  # norm scales / biases / gates: replicated
 
         if key.startswith("experts_") and ndim >= 3:
             e, a, b = shape[-3:]
@@ -78,17 +93,33 @@ def param_specs(params, mesh, fsdp_axis: Axis, tp_axis: Axis):
                 spec3 = (None, _fit(mesh, a, tp_axis), _fit(mesh, b, fsdp_axis))
             else:
                 spec3 = (None, _fit(mesh, a, fsdp_axis), _fit(mesh, b, tp_axis))
-            return P(*([None] * (ndim - 3)), *spec3)
+            return (None,) * (ndim - 3) + spec3
 
         if key == "embed":
             # vocab-parallel embedding (logits reduce over tp at the head)
-            return P(_fit(mesh, shape[0], tp_axis), _fit(mesh, shape[1], fsdp_axis))
+            return (_fit(mesh, shape[0], tp_axis), _fit(mesh, shape[1], fsdp_axis))
 
         if key in _ROW_PARALLEL:
             d2 = (_fit(mesh, shape[-2], tp_axis), _fit(mesh, shape[-1], fsdp_axis))
         else:
             d2 = (_fit(mesh, shape[-2], fsdp_axis), _fit(mesh, shape[-1], tp_axis))
-        return P(*([None] * (ndim - 2)), *d2)
+        return (None,) * (ndim - 2) + d2
+
+    def leaf(path, x):
+        keys = _path_keys(path)
+        shape = tuple(x.shape)
+        if (
+            stage_axis is not None
+            and shape
+            and any(keys[: len(p)] == list(p) for p in prefixes)
+        ):
+            # stage-stacked trunk leaf: stage over the stacked layer dim,
+            # role-aware assignment for the per-layer trailing dims
+            return P(_fit(mesh, shape[0], stage_axis),
+                     *role_entries(keys[-1], shape[1:]))
+        if len(shape) <= 1 or keys[-1] in _VECTOR:
+            return P()  # norm scales / biases / per-head gates: replicated
+        return P(*role_entries(keys[-1], shape))
 
     return jax.tree_util.tree_map_with_path(leaf, params)
 

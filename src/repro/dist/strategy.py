@@ -25,6 +25,18 @@ Three strategies:
 - ``"plain"``: no shard_map — standard auto-SPMD data parallelism. Used as
   the non-SASG baseline and as the fallback whenever one worker replica of
   the parameters (plus SASG worker state) cannot fit beside the TP shards.
+
+Pipeline parallelism composes with flat and hierarchical strategies: when
+the mesh carries a ``stage`` axis and ``pipeline_stages >= 2`` is requested,
+``stage_axis`` joins the manual shard_map set and the train step runs the
+forward/backward through ``dist.pipeline.pipeline_apply`` (GPipe
+microbatching), with the model's homogeneous trunk params stage-sharded on
+their stacked layer dim. Fallbacks mirror the flat/hierarchical logic:
+
+- no ``stage`` axis in the mesh -> no pipelining (knob silently ignored);
+- trunk depth not divisible by the stage-axis size -> no pipelining (the
+  stage axis stays in the mesh but everything is replicated over it);
+- "plain" never pipelines (pipelining requires the shard_map region).
 """
 from __future__ import annotations
 
@@ -53,10 +65,17 @@ class Strategy:
     data_axis: Axis                # auto data axis inside the worker region
     tp_axis: Axis
     num_workers: int
+    stage_axis: Optional[str] = None  # manual pipeline axis (None = no PP)
+    pipeline_stages: int = 1       # size of stage_axis (1 = no pipelining)
+    microbatches: int = 0          # GPipe microbatches (0 -> pipeline_stages)
 
     @property
     def uses_shard_map(self) -> bool:
         return bool(self.upload_axes)
+
+    @property
+    def pipelined(self) -> bool:
+        return self.stage_axis is not None and self.pipeline_stages > 1
 
     @property
     def worker_axes(self) -> Tuple[str, ...]:
@@ -94,6 +113,9 @@ def choose_strategy(
     sasg_enabled: bool = True,
     params_bytes: Optional[int] = None,
     replica_budget_bytes: int = WORKER_REPLICA_BUDGET_BYTES,
+    pipeline_stages: int = 1,
+    microbatches: int = 0,
+    trunk_layers: Optional[int] = None,
 ) -> Strategy:
     """Pick the execution strategy for a mesh.
 
@@ -102,19 +124,49 @@ def choose_strategy(
     - 2-D / 1-D data meshes -> "flat" (each data slice is a worker);
     - SASG disabled, or ``params_bytes`` too large to worker-replicate ->
       "plain" (auto-SPMD DP, FSDP over every data-like axis).
+
+    ``pipeline_stages >= 2`` requests GPipe pipelining over the mesh's
+    ``stage`` axis. The request degrades gracefully (module docstring): it is
+    dropped when the mesh has no ``stage`` axis, when the model's homogeneous
+    trunk depth (``trunk_layers``, when known) does not divide over the stage
+    axis, or when the chosen strategy is "plain". The stage-axis size always
+    wins over the requested count — stages are physical mesh slices.
     """
     names = tuple(mesh.axis_names)
     sizes = dict(zip(names, mesh.devices.shape))
     tp = "model" if "model" in sizes else None
     dp = tuple(a for a in names if a in ("pod", "data"))
+
+    # Carve the stage axis: the knob engages only when the mesh has one.
+    # ``trunk_layers`` semantics: None = unknown (caller vouches for the
+    # model), 0 = model has no pipelineable trunk, N = trunk depth.
+    stage = "stage" if "stage" in sizes and sizes["stage"] > 1 else None
+    stages = sizes.get(stage, 1) if stage else 1
+    if pipeline_stages <= 1 or stages <= 1:
+        stage, stages = None, 1
+    elif trunk_layers is not None and (
+        trunk_layers <= 0 or trunk_layers % stages != 0
+    ):
+        # divisibility fallback: keep the mesh, drop the pipelining (the
+        # stage axis stays replicated; mirrors the params_bytes fit fallback)
+        stage, stages = None, 1
+
     if not dp:  # degenerate (TP-only) mesh: nothing to carve workers from
         return Strategy("plain", (), (), None, None, tp, 1)
 
     dp_degree = math.prod(sizes[a] for a in dp)
+    # Stage sharding divides the trunk (the bulk of params) over the stage
+    # axis, so it joins TP in the worker-replica fit denominator. This is an
+    # upper bound on the per-device replica (pre/post-trunk params are not
+    # stage-sharded), consistent with REPLICA_OVERHEAD being a cost model.
     fits = worker_replication_fits(
-        params_bytes, sizes.get(tp, 1) if tp else 1, replica_budget_bytes
+        params_bytes,
+        (sizes.get(tp, 1) if tp else 1) * stages,
+        replica_budget_bytes,
     )
     if not sasg_enabled or not fits:
+        # "plain" never pipelines: pipeline_apply needs the manual shard_map
+        # region that plain, by definition, does not open.
         fsdp = dp if len(dp) > 1 else dp[0]
         return Strategy("plain", (), dp, fsdp, fsdp, tp, dp_degree)
 
@@ -124,8 +176,11 @@ def choose_strategy(
         # (tests/test_known_limits.py::test_fsdp_inside_manual_podaxis...).
         return Strategy(
             "hierarchical", ("pod",), ("pod", "data"), None, "data", tp,
-            sizes["pod"],
+            sizes["pod"], stage, stages, microbatches,
         )
 
     wa = dp[0]
-    return Strategy("flat", (wa,), (wa,), None, None, tp, sizes[wa])
+    return Strategy(
+        "flat", (wa,), (wa,), None, None, tp, sizes[wa],
+        stage, stages, microbatches,
+    )

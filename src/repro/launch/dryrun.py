@@ -69,19 +69,41 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, algo: str = "sasg",
                 json.dump(record, f, indent=1)
         return record
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    chips = int(mesh.devices.size)
-    record["chips"] = chips
-
     model = build(cfg, remat=remat)
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     pbytes = tree_bytes(params_shape)
     total_p, active_p = H.active_param_count(params_shape, cfg.moe)
     record.update(params=total_p, active_params=active_p, params_bytes=pbytes)
 
+    # Train cells with a pipeline preference get the stage axis carved out of
+    # the data axis; serve cells never pipeline. Pre-check the knob so an
+    # infeasible preference (no trunk, indivisible trunk or data axis) never
+    # cripples the mesh — and if choose_strategy itself falls back (e.g. the
+    # params_bytes fit check lands on "plain"), rebuild the uncarved mesh so
+    # the recorded layout matches the real non-pipelined production run.
+    trunk = model.pipeline.n_layers if model.pipeline else 0
+    stages = cfg.pipeline_stages if shp.kind == "train" else 1
+    data_axis = 16  # make_production_mesh data-axis size (both mesh kinds)
+    if stages > 1 and (trunk <= 0 or trunk % stages or data_axis % stages):
+        stages = 1
+    mesh = make_production_mesh(multi_pod=multi_pod, pipeline_stages=stages)
+
     if shp.kind == "train":
-        strategy = choose_strategy(mesh, sasg_enabled=algo != "sgd", params_bytes=pbytes)
+        strategy = choose_strategy(
+            mesh, sasg_enabled=algo != "sgd", params_bytes=pbytes,
+            pipeline_stages=stages, trunk_layers=trunk,
+        )
+        if stages > 1 and not strategy.pipelined:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+            strategy = choose_strategy(
+                mesh, sasg_enabled=algo != "sgd", params_bytes=pbytes,
+            )
         record["strategy"] = strategy.name
+        record["pipeline_stages"] = strategy.pipeline_stages
+    chips = int(mesh.devices.size)
+    record["chips"] = chips
+
+    if shp.kind == "train":
         if algo == "sasg_opt":
             # beyond-paper optimized variant (EXPERIMENTS.md §Perf iters 4-5):
             # probe-based selection + compact wire payloads
@@ -108,6 +130,16 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, algo: str = "sasg",
             state_shape, built.state_shardings,
         )
         batch = train_batch_specs(cfg, shp)
+        if strategy.pipelined:
+            from repro.launch.input_specs import pipeline_microbatch_specs
+
+            record["pipeline_microbatch"] = {
+                k: list(v.shape)
+                for k, v in pipeline_microbatch_specs(
+                    batch, strategy.pipeline_stages, strategy.microbatches,
+                    strategy.num_workers,
+                ).items()
+            }
         bshard = built.batch_sharding_fn(batch)
         batch_sds = jax.tree.map(
             lambda x, sh: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sh),

@@ -41,6 +41,25 @@ def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
     }
 
 
+def pipeline_microbatch_specs(train_specs: dict, stages: int,
+                              microbatches: int = 0, num_workers: int = 1) -> dict:
+    """Per-worker microbatched view of a train batch for pipelined dry-runs.
+
+    The train step replicates the worker batch over the ``stage`` axis and
+    reshapes it to ``(n_micro, mb, ...)`` inside the shard_map region
+    (dist/pipeline.py); these specs describe that region-local shape so the
+    dry-run and the roofline can account the GPipe ring traffic.
+    """
+    from repro.dist.pipeline import resolve_microbatches
+
+    out = {}
+    for k, x in train_specs.items():
+        b = x.shape[0] // max(num_workers, 1)
+        nm = resolve_microbatches(b, microbatches or stages)
+        out[k] = jax.ShapeDtypeStruct((nm, b // nm) + x.shape[1:], x.dtype)
+    return out
+
+
 def decode_specs(cfg: ModelConfig, shape: ShapeConfig, init_cache) -> tuple:
     """(cache_specs, tokens, pos) for one decode step against a seq_len cache."""
     b, s = shape.global_batch, shape.seq_len

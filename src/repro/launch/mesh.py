@@ -7,7 +7,11 @@ XLA_FLAGS=--xla_force_host_platform_device_count=<n> BEFORE importing jax.
 from __future__ import annotations
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False, pipeline_stages: int = 1):
+    """The production device mesh. ``pipeline_stages >= 2`` carves a
+    ``stage`` axis out of the data axis (stages are contiguous device blocks
+    inside what would otherwise be data slices, keeping the high-traffic
+    model axis innermost); the data-axis size must divide evenly."""
     import numpy as np
 
     import jax
@@ -16,6 +20,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if pipeline_stages > 1:
+        di = axes.index("data")
+        if shape[di] % pipeline_stages:
+            raise ValueError(
+                f"data axis {shape[di]} not divisible by "
+                f"pipeline_stages={pipeline_stages}"
+            )
+        shape = (shape[:di] + (shape[di] // pipeline_stages, pipeline_stages)
+                 + shape[di + 1:])
+        axes = axes[:di + 1] + ("stage",) + axes[di + 1:]
     n = int(np.prod(shape))
     devices = jax.devices()
     if len(devices) < n:

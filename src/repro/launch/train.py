@@ -27,6 +27,13 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--mesh-shape", default="4,2",
                     help="data,model (or pod,data,model) sizes")
+    ap.add_argument("--stages", type=int, default=1,
+                    help="GPipe pipeline stages; >1 inserts a stage axis of "
+                         "that size before the LAST --mesh-shape entry (the "
+                         "model axis — keep the data axis in --mesh-shape, "
+                         "e.g. --mesh-shape 2,1 --stages 2)")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="GPipe microbatches per worker (0 -> stages)")
     ap.add_argument("--fake-devices", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -34,6 +41,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     shape = tuple(int(x) for x in args.mesh_shape.split(","))
+    if args.stages > 1:
+        shape = shape[:-1] + (args.stages, shape[-1])
     ndev = 1
     for s in shape:
         ndev *= s
@@ -47,7 +56,12 @@ def main(argv=None):
 
     from repro.configs import get_config
     from repro.core import PRESETS
-    from repro.data import ShardedLoader, token_stream
+    from repro.data import (
+        ShardedLoader,
+        classification_stream,
+        synthetic_classification,
+        token_stream,
+    )
     from repro.dist.strategy import choose_strategy
     from repro.launch.mesh import make_test_mesh
     from repro.models import build
@@ -60,13 +74,20 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = build(cfg, remat=args.remat)
 
-    axes = ("pod", "data", "model")[-len(shape):]
+    if args.stages > 1:
+        axes = ("pod", "data", "stage", "model")[-len(shape):]
+    else:
+        axes = ("pod", "data", "model")[-len(shape):]
     mesh = make_test_mesh(shape, axes)
     params_bytes = tree_bytes(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
-    strategy = choose_strategy(mesh, sasg_enabled=args.algo != "sgd",
-                               params_bytes=params_bytes)
+    strategy = choose_strategy(
+        mesh, sasg_enabled=args.algo != "sgd", params_bytes=params_bytes,
+        pipeline_stages=args.stages, microbatches=args.microbatches,
+        trunk_layers=model.pipeline.n_layers if model.pipeline else 0,
+    )
     print(f"[train] arch={cfg.name} algo={args.algo} mesh={dict(zip(axes, shape))} "
-          f"strategy={strategy.name} workers={strategy.num_workers}")
+          f"strategy={strategy.name} workers={strategy.num_workers} "
+          f"stages={strategy.pipeline_stages}")
 
     if args.algo in ("sasg", "sparse"):
         scfg = PRESETS[args.algo](k_ratio=args.k_ratio)
@@ -74,7 +95,13 @@ def main(argv=None):
         scfg = PRESETS[args.algo]()
     built = build_train_step(model, scfg, mesh, strategy, constant(args.lr))
 
-    stream = token_stream(cfg.vocab_size, args.global_batch, args.seq_len, seed=0)
+    if cfg.family in ("mlp", "cnn"):
+        # paper nets train on the synthetic classification mixture, not tokens
+        img = (28, 28, 1) if cfg.family == "mlp" else (32, 32, 3)
+        xs, ys = synthetic_classification(2048, cfg.vocab_size, img, seed=0)
+        stream = classification_stream(xs, ys, args.global_batch, seed=0)
+    else:
+        stream = token_stream(cfg.vocab_size, args.global_batch, args.seq_len, seed=0)
 
     def data():
         import jax.numpy as jnp

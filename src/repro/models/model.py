@@ -27,6 +27,25 @@ NUM_PATCH_TOKENS = 256     # VLM stub prefix length
 ENC_FRAC = 2               # enc-dec: S_src = S_tgt = seq_len // 2
 
 
+class PipelineDef(NamedTuple):
+    """Stage-decomposed view of a model for GPipe pipelining (dist.pipeline).
+
+    The model's homogeneous *trunk* — ``n_layers`` identical-structure layers
+    whose params live stacked on a leading layer dim under ``trunk_path`` in
+    the params tree, and whose activations keep one shape end to end — is the
+    pipelineable segment. ``prepare``/``finish`` hold everything before/after
+    it (embed/stem, remainder layers, norm, head, loss) and MUST NOT read the
+    trunk subtree: inside the train step's shard_map the trunk leaves are the
+    local stage slice, not the full stack.
+    """
+
+    n_layers: int                                      # trunk depth (stacked dim)
+    trunk_path: tuple                                  # params-tree path of the trunk
+    prepare: Callable[[Any, Any], jax.Array]           # (params, batch) -> h (B, ...)
+    layer_fn: Callable[[Any, jax.Array], jax.Array]    # (layer_params, h) -> h
+    finish: Callable[[Any, jax.Array, Any], jax.Array]  # (params, h, batch) -> loss
+
+
 class Model(NamedTuple):
     config: ModelConfig
     init: Callable[[jax.Array], Any]
@@ -34,6 +53,7 @@ class Model(NamedTuple):
     prefill: Optional[Callable]                        # (params, batch) -> (logits, cache)
     decode_step: Optional[Callable]                    # (params, cache, tokens, pos) -> (logits, cache)
     init_cache: Optional[Callable]                     # (batch, max_seq) -> cache
+    pipeline: Optional[PipelineDef] = None             # stage decomposition (or None)
 
 
 def chunked_ce(
@@ -71,6 +91,51 @@ def _head_weight(params, cfg):
 # decoder-only LM families (dense / moe / hybrid / ssm / vlm)
 # ---------------------------------------------------------------------------
 
+def _lm_pipeline(cfg: ModelConfig, remat: str) -> Optional[PipelineDef]:
+    """Stage decomposition of the unit-scanned LM stack.
+
+    Only homogeneous patterns (one layer kind per unit, ``u == 1``) pipeline:
+    the trunk is ``params["unit"][0]`` with all ``n_layers`` layers stacked on
+    the leading dim (and ``rem == 0`` by construction), so activations keep
+    the (B, S, d) shape across every stage boundary. ``remat`` applies per
+    trunk layer, mirroring the per-unit policy of the scanned forward.
+    """
+    u, n_units, rem = LM._unit_layout(cfg)
+    if u != 1 or rem != 0 or n_units < 1:
+        return None
+    kind = cfg.attn_pattern[0]
+    is_vlm = cfg.frontend == "patch_embed"
+
+    def prepare(params, batch):
+        x = L.embed_apply(params, cfg, batch["tokens"])
+        prefix = batch.get("patch_embeds") if is_vlm else None
+        if prefix is not None:
+            x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+        return x
+
+    def layer_fn(wl, h):
+        positions = jnp.arange(h.shape[1])
+        h, _ = LM._layer_apply(wl, cfg, kind, h, positions)
+        return h
+
+    if remat == "full":
+        layer_fn = jax.checkpoint(layer_fn)
+    elif remat == "dots":
+        layer_fn = jax.checkpoint(
+            layer_fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+
+    def finish(params, h, batch):
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        prefix = batch.get("patch_embeds") if is_vlm else None
+        if prefix is not None:
+            h = h[:, prefix.shape[1]:]
+        return chunked_ce(h, _head_weight(params, cfg), batch["labels"])
+
+    return PipelineDef(n_units, ("unit", 0), prepare, layer_fn, finish)
+
+
 def _build_lm(cfg: ModelConfig, remat: str) -> Model:
     is_vlm = cfg.frontend == "patch_embed"
 
@@ -107,7 +172,8 @@ def _build_lm(cfg: ModelConfig, remat: str) -> Model:
     def init_cache(batch, max_seq):
         return LM.lm_init_cache(cfg, batch, max_seq)
 
-    return Model(cfg, init, loss_fn, prefill, decode_step, init_cache)
+    return Model(cfg, init, loss_fn, prefill, decode_step, init_cache,
+                 pipeline=_lm_pipeline(cfg, remat))
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +228,32 @@ def _build_encdec(cfg: ModelConfig, remat: str) -> Model:
 # paper models
 # ---------------------------------------------------------------------------
 
+def _softmax_ce(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def _cnn_pipeline(cfg: ModelConfig) -> PipelineDef:
+    """CNN stage decomposition: the full-width stride-1 trunk blocks pipeline
+    (homogeneous activation shape); stem and the stride-2 downsampling stages
+    run replicated in prepare/finish (their activation shapes change at block
+    boundaries, so they cannot ride the homogeneous GPipe ring)."""
+
+    def prepare(params, batch):
+        return PN.cnn_stem(params, batch["x"])
+
+    def finish(params, h, batch):
+        return _softmax_ce(PN.cnn_head(params, h), batch["labels"])
+
+    return PipelineDef(
+        PN.CNN_TRUNK_DEPTH, ("trunk",), prepare,
+        lambda wl, h: PN.cnn_trunk_block(wl, h), finish,
+    )
+
+
 def _build_paper(cfg: ModelConfig) -> Model:
     is_fc = cfg.family == "mlp"
 
@@ -170,17 +262,13 @@ def _build_paper(cfg: ModelConfig) -> Model:
 
     def loss_fn(params, batch):
         logits = (PN.fc_apply if is_fc else PN.cnn_apply)(params, cfg, batch["x"])
-        labels = batch["labels"]
-        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
-        gold = jnp.take_along_axis(
-            logits.astype(jnp.float32), labels[..., None], axis=-1
-        )[..., 0]
-        return jnp.mean(lse - gold)
+        return _softmax_ce(logits, batch["labels"])
 
     def predict(params, batch):
         return (PN.fc_apply if is_fc else PN.cnn_apply)(params, cfg, batch["x"])
 
-    return Model(cfg, init, loss_fn, predict, None, None)
+    return Model(cfg, init, loss_fn, predict, None, None,
+                 pipeline=None if is_fc else _cnn_pipeline(cfg))
 
 
 def build(cfg: ModelConfig, remat: str = "none") -> Model:

@@ -91,25 +91,47 @@ def _block_apply(p, x, stride):
     return jax.nn.relu(h + skip)
 
 
+# Depth of the homogeneous full-width trunk (the stage-1 basic blocks, which
+# share activation shape and param structure). They are stored stacked on a
+# leading axis so dist.sharding / dist.pipeline can stage-shard them; the
+# downsampling stages (stride-2 boundaries change the activation shape, so
+# they cannot ride a homogeneous GPipe ring) stay flat per-block leaves.
+CNN_TRUNK_DEPTH = 2
+
+
 def cnn_init(key, cfg: ModelConfig, in_ch: int = 3) -> Params:
     c = cfg.d_model  # base width (64)
     ks = jax.random.split(key, 9)
+    trunk = [_block_init(ks[1 + l], c, c, 1) for l in range(CNN_TRUNK_DEPTH)]
     return {
         "stem": _conv_init(ks[0], 3, 3, in_ch, c), "gn0": _gn_init(c),
-        "s1b1": _block_init(ks[1], c, c, 1), "s1b2": _block_init(ks[2], c, c, 1),
+        "trunk": jax.tree.map(lambda *xs: jnp.stack(xs), *trunk),
         "s2b1": _block_init(ks[3], c, 2 * c, 2), "s2b2": _block_init(ks[4], 2 * c, 2 * c, 1),
         "s3b1": _block_init(ks[5], 2 * c, 4 * c, 2), "s3b2": _block_init(ks[6], 4 * c, 4 * c, 1),
         "head": _dense_init(ks[7], 4 * c, cfg.vocab_size),
     }
 
 
-def cnn_apply(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
-    h = jax.nn.relu(_gn(_conv(x, params["stem"]), params["gn0"]))
-    h = _block_apply(params["s1b1"], h, 1)
-    h = _block_apply(params["s1b2"], h, 1)
+def cnn_stem(params: Params, x: jax.Array) -> jax.Array:
+    return jax.nn.relu(_gn(_conv(x, params["stem"]), params["gn0"]))
+
+
+def cnn_trunk_block(block_params: Params, h: jax.Array) -> jax.Array:
+    """One full-width (stride-1) trunk block — the pipeline layer_fn."""
+    return _block_apply(block_params, h, 1)
+
+
+def cnn_head(params: Params, h: jax.Array) -> jax.Array:
     h = _block_apply(params["s2b1"], h, 2)
     h = _block_apply(params["s2b2"], h, 1)
     h = _block_apply(params["s3b1"], h, 2)
     h = _block_apply(params["s3b2"], h, 1)
     h = h.mean(axis=(1, 2))
     return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def cnn_apply(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = cnn_stem(params, x)
+    for l in range(CNN_TRUNK_DEPTH):
+        h = cnn_trunk_block(jax.tree.map(lambda w: w[l], params["trunk"]), h)
+    return cnn_head(params, h)

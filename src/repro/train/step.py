@@ -33,6 +33,7 @@ from repro.core.types import (
     tree_size,
     tree_sq_norm,
 )
+from repro.dist.pipeline import build_pipelined_vag, resolve_microbatches
 from repro.dist.sharding import param_specs
 from repro.dist.strategy import Strategy
 from repro.models.model import Model
@@ -111,22 +112,90 @@ def build_train_step(
     waxes = strategy.worker_axes
     wa = (waxes if len(waxes) > 1 else (waxes[0] if waxes else None))
 
+    # Pipeline composition: a stage axis only engages inside the worker
+    # shard_map region, and needs the model's homogeneous trunk (PipelineDef)
+    # to divide over the stages. choose_strategy applies soft fallbacks when
+    # it is told the trunk depth; an incompatible hand-built Strategy is a
+    # config error and fails eagerly here.
+    stage = strategy.stage_axis if (
+        strategy.pipelined and strategy.uses_shard_map
+    ) else None
+    pdef = model.pipeline
+    if stage is not None:
+        if pdef is None:
+            raise ValueError(
+                f"strategy requests pipeline_stages={strategy.pipeline_stages} "
+                f"but model {model.config.name!r} has no PipelineDef "
+                "(no homogeneous stage-stackable trunk)"
+            )
+        if pdef.n_layers % strategy.pipeline_stages != 0:
+            raise ValueError(
+                f"trunk depth {pdef.n_layers} does not divide over "
+                f"{strategy.pipeline_stages} pipeline stages; pass "
+                "trunk_layers to choose_strategy for the soft fallback"
+            )
+    trunk_paths = (tuple(str(k) for k in pdef.trunk_path),) if stage else ()
+
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    pspecs = param_specs(params_shape, mesh, strategy.fsdp_axis, strategy.tp_axis)
+    pspecs = param_specs(
+        params_shape, mesh, strategy.fsdp_axis, strategy.tp_axis,
+        stage_axis=stage, trunk_paths=trunk_paths,
+    )
+
+    def _stage_only(spec):
+        """The manual-stage part of a param spec (trunk stacked dim)."""
+        return P(*[e if (stage is not None and e == stage) else None
+                   for e in tuple(spec)])
+
+    def _no_stage(spec):
+        """A param spec with the manual stage axis stripped (auto axes only)."""
+        return P(*[None if (stage is not None and e == stage) else e
+                   for e in tuple(spec)])
+
     vag = jax.value_and_grad(model.loss_fn)
+    # Inside the worker region, pipelined strategies swap value_and_grad for
+    # the stage-pipelined version: fresh and stale-params auxiliary gradients
+    # both run the GPipe forward/backward, and come back as the FULL gradient
+    # tree replicated over stages (dist/pipeline.py) — so selection, error
+    # feedback, compression, and the exchange are unchanged.
+    worker_vag = (
+        build_pipelined_vag(pdef, stage, strategy.microbatches)
+        if stage is not None else vag
+    )
 
     if strategy.uses_shard_map:
         # inner_dp stays an AUTO axis: the in-pod gradient mean over it is the
         # automatic backward psum of the batch sharding — no manual reduce.
         axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        # the exchange runs on the FULL gradient tree (pipelined strategies
+        # gather the trunk grad over stages first), so its leaf specs must
+        # not carry the manual stage axis — payload sizing and the sharded
+        # top-k layout would otherwise diverge from the non-pipelined run
         exchange = build_exchange(
             sasg_cfg,
             worker_axes=waxes,
             reduce_axes=(),
             num_workers=M,
-            leaf_specs=pspecs,
+            leaf_specs=jax.tree.map(
+                _no_stage, pspecs, is_leaf=lambda x: isinstance(x, P)
+            ),
             axis_sizes=axis_sizes,
         )
+        comp = sasg_cfg.compressor
+        if stage is not None and exchange.compressor.kind == "sparse" and (
+            comp.bucket == "global" or comp.topk_impl != "sharded"
+        ):
+            # These densify paths reshape the exchanged payload against the
+            # in-region params tree, whose trunk is stage-SLICED under
+            # pipelining — the update would come out trunk-slice-shaped.
+            # Only the stage-aware default ("sharded" top-k, per-tensor
+            # buckets) and dense compressors compose today (ROADMAP).
+            raise NotImplementedError(
+                f"sparse compressor (topk_impl={comp.topk_impl!r}, "
+                f"bucket={comp.bucket!r}) does not compose with pipeline "
+                "parallelism yet; use topk_impl='sharded' with per-tensor "
+                "buckets, or a dense compressor"
+            )
         bits_paper = exchange.bits_per_upload_paper(params_shape)
         bits_wire = exchange.bits_per_upload_wire(params_shape)
     else:
@@ -174,7 +243,10 @@ def build_train_step(
 
     def _wstate_specs(ws_shape):
         """Worker dim over worker axes; stale_params additionally reuse param
-        specs on their trailing dims (they ARE param-shaped)."""
+        specs on their trailing dims (they ARE param-shaped, stage sharding
+        included — they must mirror the params the pipelined forward slices).
+        comp_state (EF buffers) lives in the full-gradient exchange domain,
+        so it keeps the auto-axis specs but stays replicated over stages."""
         base = _worker_stacked(ws_shape, wa)
         if not strategy.uses_shard_map or SIMPLE_WSTATE_SPECS:
             return base
@@ -186,7 +258,8 @@ def build_train_step(
                 base = base._replace(stale_params=stale)
             if jax.tree.structure(ws_shape.comp_state) == jax.tree.structure(params_shape):
                 err = jax.tree.map(
-                    lambda x, ps: P(wa, *tuple(ps)), ws_shape.comp_state, pspecs
+                    lambda x, ps: P(wa, *tuple(_no_stage(ps))),
+                    ws_shape.comp_state, pspecs,
                 )
                 base = base._replace(comp_state=err)
         except (AttributeError, ValueError):
@@ -232,12 +305,12 @@ def build_train_step(
                 )
             key = jax.random.fold_in(key, _worker_index(waxes))
             update, new_wstate, info = exchange.run(
-                params, batch, wstate, gstate, lr, key, vag
+                params, batch, wstate, gstate, lr, key, worker_vag
             )
             # pin the densified update to the parameter sharding over the
             # AUTO axes (otherwise XLA replicates the fp32 update tree —
             # 32 GB/device on llama3-8b; EXPERIMENTS.md §Perf iteration 1)
-            manual_set = set(waxes)
+            manual_set = set(waxes) | ({stage} if stage is not None else set())
 
             def _strip_manual(spec):
                 out = []
@@ -256,14 +329,42 @@ def build_train_step(
                 )
             return update, add_worker_axis(new_wstate), add_worker_axis(info)
 
+        def _params_region_specs(params):
+            """shard_map specs for the params input: replicated over worker
+            axes; trunk leaves stage-sliced when pipelining (each stage gets
+            its contiguous block of stacked layers)."""
+            if stage is None:
+                return _rep(params)
+            return jax.tree.map(
+                _stage_only, pspecs, is_leaf=lambda x: isinstance(x, P)
+            )
+
+        def _wstate_region_specs(ws):
+            """shard_map specs for the worker state: worker dim over worker
+            axes; stale_params additionally stage-sliced on the trunk so they
+            mirror the params tree the pipelined grad_fn consumes."""
+            base = _worker_stacked(ws, wa)
+            if stage is None:
+                return base
+            try:
+                if jax.tree.structure(ws.stale_params) == jax.tree.structure(params_shape):
+                    stale = jax.tree.map(
+                        lambda x, ps: P(wa, *tuple(_stage_only(ps))),
+                        ws.stale_params, pspecs,
+                    )
+                    base = base._replace(stale_params=stale)
+            except (AttributeError, ValueError):
+                pass
+            return base
+
         def step(state: TrainState, batch):
             lr = lr_schedule(state.gstate.step)
             key = jax.random.fold_in(state.rng, state.gstate.step)
 
             in_specs = (
-                _rep(state.params),
+                _params_region_specs(state.params),
                 _worker_stacked(batch, wa),
-                _worker_stacked(state.wstate, wa),
+                _wstate_region_specs(state.wstate),
                 _rep(state.gstate),
                 P(),
                 P(),
@@ -275,10 +376,10 @@ def build_train_step(
 
             out_specs = (
                 _rep(state.params),
-                _worker_stacked(state.wstate, wa),
+                _wstate_region_specs(state.wstate),
                 ExchangeInfo(*([P(wa)] * len(ExchangeInfo._fields))),
             )
-            manual = set(waxes)
+            manual = set(waxes) | ({stage} if stage is not None else set())
             sm = jax.shard_map(
                 worker_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                 axis_names=manual, check_vma=False,
@@ -303,6 +404,33 @@ def build_train_step(
                 "bits_paper_total": counters.bits_paper,
                 "bits_wire_total": counters.bits_wire,
             }
+            if stage is not None:
+                # static per-stage ring traffic (CM.PipelineCommModel): one
+                # microbatch activation per stage per tick, every step,
+                # independent of the send/skip decisions
+                wbatch = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(
+                        (x.shape[0] // M,) + x.shape[1:], x.dtype
+                    ),
+                    batch,
+                )
+                pshape = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state.params
+                )
+                h = jax.eval_shape(pdef.prepare, pshape, wbatch)
+                nm = resolve_microbatches(
+                    h.shape[0], strategy.microbatches or strategy.pipeline_stages
+                )
+                pipe = CM.PipelineCommModel(
+                    stages=strategy.pipeline_stages, n_micro=nm,
+                    act_elems=int(np.prod(h.shape)) // nm,
+                    bits_per_elem=h.dtype.itemsize * 8,
+                )
+                mets["pipe_stages"] = jnp.float32(strategy.pipeline_stages)
+                mets["pipe_bits_step"] = jnp.float32(pipe.bits_per_step())
+                mets["pipe_bits_total"] = (
+                    jnp.float32(pipe.bits_per_step()) * gstate.step.astype(jnp.float32)
+                )
             return (
                 TrainState(new_params, opt_state, wstate, gstate, counters, state.rng),
                 mets,
@@ -344,7 +472,19 @@ def build_train_step(
         return fn(state, batch)
 
     def init(key):
-        return jax.jit(init_all, out_shardings=state_shardings)(key)
+        if compat.HAS_AXIS_TYPES:
+            # modern jaxlib: partitionable threefry makes sharded-output RNG
+            # value-stable, so the state can be born sharded (no replicated
+            # transient — required for models that only fit sharded)
+            return jax.jit(init_all, out_shardings=state_shardings)(key)
+        # Pinned 0.4.x jaxlib: jit(out_shardings=...) partitions the threefry
+        # computation and yields global values that differ from the eager
+        # init (observed as a stage-count factor on stage-sharded trunk
+        # leaves). Initialize unsharded, then lay out with device_put — pure
+        # data movement, value-exact — at the cost of one transiently
+        # replicated state. Fine on the CPU test meshes; ROADMAP tracks
+        # re-verifying the direct sharded init after a jaxlib upgrade.
+        return jax.device_put(jax.jit(init_all)(key), state_shardings)
 
     return BuiltStep(
         step=step,

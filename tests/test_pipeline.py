@@ -1,41 +1,200 @@
-"""Pipeline parallelism: pipelined == sequential execution."""
+"""Pipeline parallelism: pipelined == sequential execution, values and grads.
+
+Covers the bare GPipe kernel (``pipeline_apply`` over 2 and 4 stages on the
+8-fake-device CPU mesh) and the SASG-facing composition helpers
+(``build_pipelined_loss`` / ``build_pipelined_vag``): the stage-0 loss mask
+plus psum/all-gather grad combine must reproduce the sequential loss AND the
+full gradient tree on every stage.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.pipeline import build_pipelined_forward, pipeline_apply
+import repro.compat
+from repro.dist.pipeline import (
+    build_pipelined_forward,
+    build_pipelined_loss,
+    build_pipelined_vag,
+    pipeline_apply,
+    resolve_microbatches,
+)
+from repro.models.model import PipelineDef
 
 
-def test_pipeline_matches_sequential(mesh2d):
-    # reuse the 4x2 mesh: treat 'data' as the stage axis (4 stages)
-    S, L_per, n_micro, mb, d = 4, 2, 6, 3, 8
+def _layer_fn(w, h):
+    return jnp.tanh(h @ w)
+
+
+def _stage_mesh(S):
+    return repro.compat.make_mesh((S,), ("stage",))
+
+
+@pytest.mark.parametrize("S", [2, 4])
+def test_pipeline_matches_sequential(S):
+    L_per, n_micro, mb, d = 2, 6, 3, 8
     rng = np.random.default_rng(0)
-    # per-stage params: (S, L_per, d, d)
     W = jnp.asarray(rng.normal(size=(S, L_per, d, d)).astype(np.float32) * 0.2)
     x = jnp.asarray(rng.normal(size=(n_micro, mb, d)).astype(np.float32))
 
-    def layer_fn(w, h):
-        return jnp.tanh(h @ w)
-
-    stage_fn = build_pipelined_forward(layer_fn, L_per, axis="data")
+    stage_fn = build_pipelined_forward(_layer_fn, L_per, axis="stage")
 
     def worker(wseg, micro_x):
-        wseg = wseg[0]  # strip stage-stacked dim (manual shard)
-        return pipeline_apply(stage_fn, wseg, micro_x, axis="data")
+        return pipeline_apply(stage_fn, wseg, micro_x, axis="stage")
 
     sm = jax.shard_map(
-        worker, mesh=mesh2d,
-        in_specs=(P("data"), P()),
+        worker, mesh=_stage_mesh(S),
+        in_specs=(P("stage"), P()),
         out_specs=P(),
-        axis_names={"data"}, check_vma=False,
+        axis_names={"stage"}, check_vma=False,
     )
-    out_pipe = jax.jit(sm)(W, x)
+    out_pipe = jax.jit(sm)(W.reshape(S * L_per, d, d), x)
 
-    # sequential reference: all S*L_per layers applied in order
     ref = x
-    for s in range(S):
-        for l in range(L_per):
-            ref = jnp.tanh(ref @ W[s, l])
+    for l in range(S * L_per):
+        ref = _layer_fn(W.reshape(S * L_per, d, d)[l], ref)
     np.testing.assert_allclose(np.asarray(out_pipe), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("S", [2, 4])
+def test_pipeline_grads_match_sequential(S):
+    """Grads THROUGH pipeline_apply (ppermute ring + psum transpose) equal
+    the sequential stack's grads for both the stage params and the input."""
+    L_per, n_micro, mb, d = 1, 4, 2, 6
+    rng = np.random.default_rng(1)
+    W = jnp.asarray(rng.normal(size=(S * L_per, d, d)).astype(np.float32) * 0.3)
+    x = jnp.asarray(rng.normal(size=(n_micro, mb, d)).astype(np.float32))
+    t = jnp.asarray(rng.normal(size=(n_micro, mb, d)).astype(np.float32))
+
+    stage_fn = build_pipelined_forward(_layer_fn, L_per, axis="stage")
+
+    def worker(wseg, micro_x, tgt):
+        def loss_fn(wseg_, micro_x_):
+            out = pipeline_apply(stage_fn, wseg_, micro_x_, axis="stage")
+            loss = jnp.mean((out - tgt) ** 2)
+            # stage-0 mask: makes the psum below the uniform grad combine
+            return jnp.where(jax.lax.axis_index("stage") == 0, loss, 0.0)
+
+        loss, (gw, gx) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+            wseg, micro_x
+        )
+        gw_full = jax.lax.all_gather(gw, "stage", axis=0, tiled=True)
+        return (jax.lax.psum(loss, "stage"), gw_full,
+                jax.lax.psum(gx, "stage"))
+
+    sm = jax.shard_map(
+        worker, mesh=_stage_mesh(S),
+        in_specs=(P("stage"), P(), P()),
+        out_specs=(P(), P(), P()),
+        axis_names={"stage"}, check_vma=False,
+    )
+    loss_p, gw_p, gx_p = jax.jit(sm)(W, x, t)
+
+    def ref_loss(W_, x_):
+        h = x_
+        for l in range(S * L_per):
+            h = _layer_fn(W_[l], h)
+        return jnp.mean((h - t) ** 2)
+
+    loss_r, (gw_r, gx_r) = jax.value_and_grad(ref_loss, argnums=(0, 1))(W, x)
+    np.testing.assert_allclose(float(loss_p), float(loss_r), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(gw_p), np.asarray(gw_r),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gx_p), np.asarray(gx_r),
+                               rtol=1e-4, atol=1e-6)
+
+
+def _toy_pdef(n_layers):
+    """Synthetic PipelineDef with non-trunk params on both sides of the
+    trunk, to exercise the psum (prepare/finish) vs all-gather (trunk) grad
+    combine split in build_pipelined_vag."""
+    return PipelineDef(
+        n_layers=n_layers,
+        trunk_path=("trunk",),
+        prepare=lambda params, batch: batch["x"] @ params["w_in"],
+        layer_fn=_layer_fn,
+        finish=lambda params, h, batch: jnp.mean(
+            (h @ params["w_out"] - batch["y"]) ** 2
+        ),
+    )
+
+
+@pytest.mark.parametrize("S", [2, 4])
+def test_pipelined_vag_full_tree(S):
+    n_layers, b, d_in, d, d_out = 4, 8, 5, 6, 3
+    rng = np.random.default_rng(2)
+    params = {
+        "w_in": jnp.asarray(rng.normal(size=(d_in, d)).astype(np.float32) * 0.4),
+        "trunk": jnp.asarray(rng.normal(size=(n_layers, d, d)).astype(np.float32) * 0.3),
+        "w_out": jnp.asarray(rng.normal(size=(d, d_out)).astype(np.float32) * 0.4),
+    }
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(b, d_in)).astype(np.float32)),
+        "y": jnp.asarray(rng.normal(size=(b, d_out)).astype(np.float32)),
+    }
+    pdef = _toy_pdef(n_layers)
+    vag = build_pipelined_vag(pdef, axis="stage")
+
+    sm = jax.shard_map(
+        vag, mesh=_stage_mesh(S),
+        in_specs=({"w_in": P(), "trunk": P("stage"), "w_out": P()}, P()),
+        out_specs=(P(), {"w_in": P(), "trunk": P(), "w_out": P()}),
+        axis_names={"stage"}, check_vma=False,
+    )
+    loss_p, g_p = jax.jit(sm)(params, batch)
+
+    def ref_loss(params_, batch_):
+        h = pdef.prepare(params_, batch_)
+        for l in range(n_layers):
+            h = _layer_fn(params_["trunk"][l], h)
+        return pdef.finish(params_, h, batch_)
+
+    loss_r, g_r = jax.value_and_grad(ref_loss)(params, batch)
+    np.testing.assert_allclose(float(loss_p), float(loss_r), rtol=1e-6)
+    for k in params:
+        np.testing.assert_allclose(
+            np.asarray(g_p[k]), np.asarray(g_r[k]), rtol=1e-4, atol=1e-6,
+            err_msg=f"grad mismatch for {k}",
+        )
+
+
+def test_pipelined_loss_microbatch_fallback():
+    """Batches that the configured microbatch count does not divide fall back
+    to the gcd (the LASG probe sub-batch path)."""
+    assert resolve_microbatches(8, 4) == 4
+    assert resolve_microbatches(6, 4) == 3   # largest divisor <= requested
+    assert resolve_microbatches(12, 8) == 6
+    assert resolve_microbatches(7, 4) == 1
+    assert resolve_microbatches(5, 1) == 1
+
+    # and the loss builder runs end to end on a probe-sized (odd) batch
+    n_layers, S = 2, 2
+    rng = np.random.default_rng(3)
+    params = {
+        "w_in": jnp.asarray(rng.normal(size=(4, 6)).astype(np.float32) * 0.4),
+        "trunk": jnp.asarray(rng.normal(size=(n_layers, 6, 6)).astype(np.float32) * 0.3),
+        "w_out": jnp.asarray(rng.normal(size=(6, 2)).astype(np.float32) * 0.4),
+    }
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32)),
+        "y": jnp.asarray(rng.normal(size=(3, 2)).astype(np.float32)),
+    }
+    pdef = _toy_pdef(n_layers)
+    vag = build_pipelined_vag(pdef, axis="stage", microbatches=4)
+    sm = jax.shard_map(
+        vag, mesh=_stage_mesh(S),
+        in_specs=({"w_in": P(), "trunk": P("stage"), "w_out": P()}, P()),
+        out_specs=(P(), {"w_in": P(), "trunk": P(), "w_out": P()}),
+        axis_names={"stage"}, check_vma=False,
+    )
+    loss_p, _ = jax.jit(sm)(params, batch)
+
+    def ref_loss(params_):
+        h = pdef.prepare(params_, batch)
+        for l in range(n_layers):
+            h = _layer_fn(params_["trunk"][l], h)
+        return pdef.finish(params_, h, batch)
+
+    np.testing.assert_allclose(float(loss_p), float(ref_loss(params)), rtol=1e-6)

@@ -1,6 +1,14 @@
-"""Unit tests of the adaptive selection rule (paper eq. 6)."""
+"""Unit + property tests of the adaptive selection rule (paper eq. 6).
+
+The edge cases (threshold boundary, staleness saturation, window rotation)
+run as hypothesis properties against a plain-numpy mirror of the rule; the
+suite works identically under real hypothesis and under the deterministic
+stub in tests/_hypothesis_stub.py (conftest installs it when the package is
+absent), so it stays meaningful on the no-deps test image.
+"""
 import jax.numpy as jnp
 import numpy as np
+from hypothesis import given, settings, strategies as st
 
 from repro.core.selection import (
     SelectionConfig,
@@ -36,11 +44,111 @@ def test_skip_when_difference_small():
     assert not bool(should_send(cfg, g, g, st, alphas, num_workers=4))
 
 
+# ---------------------------------------------------------------------------
+# properties (run under real hypothesis or the deterministic stub)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    diff=st.floats(min_value=0.0, max_value=4.0),
+    win=st.floats(min_value=0.0, max_value=50.0),
+    tau=st.integers(min_value=1, max_value=4),
+    workers=st.sampled_from([1, 2, 8, 64]),
+)
+def test_rule_matches_numpy_mirror(diff, win, tau, workers):
+    """should_send == the strict-inequality numpy mirror of eq. (6), with the
+    staleness cap as the only override — for any lhs/rhs configuration,
+    including the lhs == rhs boundary (diff=0, win=0 -> skip unless capped)."""
+    D = 4
+    cfg = SelectionConfig(max_delay=D)
+    g_stale = {"w": jnp.zeros(8)}
+    g_new = {"w": jnp.full(8, diff, jnp.float32)}
+    state = _state(tau=tau, window=[win] * D, D=D)
+    alphas = jnp.ones(D)
+    got = bool(should_send(cfg, g_new, g_stale, state, alphas, workers))
+    lhs = np.float32(8) * np.float32(diff) ** 2
+    rhs = np.float32(D) * np.float32(win) / np.float32(workers) ** 2
+    want = bool(lhs > rhs) or tau >= D
+    assert got == want, (lhs, rhs, tau)
+
+
+@settings(max_examples=25, deadline=None)
+@given(win=st.floats(min_value=0.0, max_value=10.0))
+def test_threshold_boundary_skips(win):
+    """Exactly on the boundary (lhs == rhs) the rule must SKIP: eq. (6) is a
+    strict inequality, so a worker whose gradient change only matches the
+    parameter-drift bound reuses its stale payload."""
+    D = 2
+    cfg = SelectionConfig(max_delay=D)
+    # build both sides from the SAME f32 square so lhs == rhs bitwise
+    w32 = np.float32(win)
+    sq = np.float32(w32 * w32)
+    g_new = {"w": jnp.asarray([w32], jnp.float32)}
+    g_stale = {"w": jnp.zeros(1, jnp.float32)}
+    state = _state(tau=1, window=[float(sq), 0.0], D=D)
+    alphas = jnp.ones(D)
+    assert not bool(should_send(cfg, g_new, g_stale, state, alphas, 1))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    tau=st.integers(min_value=1, max_value=6),
+    send=st.sampled_from([True, False]),
+)
+def test_advance_tau_step(tau, send):
+    """advance_tau resets to 1 on a send and increments by one on a skip."""
+    state = _state(tau=tau, window=[0.0] * 4)
+    out = int(advance_tau(state, jnp.asarray(send)))
+    assert out == (1 if send else tau + 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    win=st.floats(min_value=0.0, max_value=1e6),
+    steps=st.integers(min_value=1, max_value=12),
+)
+def test_tau_saturates_at_tau_max(win, steps):
+    """Driving the rule repeatedly keeps tau in [1, D]: however large the
+    window (rhs) is, the cap forces an upload before tau exceeds D — the
+    bounded-staleness guarantee Theorem 1's D-delay analysis needs."""
+    D = 4
+    cfg = SelectionConfig(max_delay=D)
+    g = {"w": jnp.ones(4)}  # fresh == stale: rule alone would always skip
+    alphas = jnp.ones(D)
+    tau = 1
+    for _ in range(steps):
+        state = _state(tau=tau, window=[win] * D, D=D)
+        send = should_send(cfg, g, g, state, alphas, num_workers=2)
+        tau = int(advance_tau(state, send))
+        assert 1 <= tau <= D
+        if tau == D:
+            assert bool(
+                should_send(cfg, g, g, _state(tau=tau, window=[win] * D, D=D),
+                            alphas, num_workers=2)
+            )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    v=st.floats(min_value=0.0, max_value=1e9),
+    d=st.integers(min_value=1, max_value=10),
+)
+def test_push_window_rotation(v, d):
+    """push_window shifts the newest ||w^{t+1}-w^t||^2 in at d=1, drops the
+    oldest entry, and preserves length and dtype."""
+    old = np.arange(1, d + 1, dtype=np.float32)
+    state = SelectionState(tau=jnp.ones((), jnp.int32), window=jnp.asarray(old))
+    new = np.asarray(push_window(state, jnp.asarray(v, jnp.float32)))
+    assert new.shape == (d,) and new.dtype == np.float32
+    np.testing.assert_allclose(new[0], np.float32(v))
+    np.testing.assert_allclose(new[1:], old[:-1])
+
+
 def test_staleness_cap_forces_send():
     cfg = SelectionConfig(max_delay=4)
     g = {"w": jnp.ones(8)}
-    st = _state(tau=4, window=[100.0] * 4)
-    assert bool(should_send(cfg, g, g, st, jnp.ones(4), num_workers=4))
+    st_capped = _state(tau=4, window=[100.0] * 4)
+    assert bool(should_send(cfg, g, g, st_capped, jnp.ones(4), num_workers=4))
 
 
 def test_deadline_skip_override():

@@ -30,6 +30,41 @@ def test_param_specs_roles(mesh2d):
     assert all(tuple(v) == () for v in norms)
 
 
+def test_param_specs_stage_trunk():
+    """Trunk leaves take the stage axis on the stacked layer dim with
+    role-aware trailing dims; everything else ignores stage_axis."""
+    import repro.compat
+
+    mesh = repro.compat.make_mesh((2, 2, 2), ("data", "stage", "model"))
+    cfg = get_config("llama3_8b").reduced()
+    model = build(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    trunk = tuple(str(k) for k in model.pipeline.trunk_path)
+    specs = param_specs(shapes, mesh, None, "model",
+                        stage_axis="stage", trunk_paths=(trunk,))
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    by_path = {
+        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp): v
+        for kp, v in flat
+    }
+    wq = [v for k, v in by_path.items() if k.startswith("unit/0") and k.endswith("wq")][0]
+    assert tuple(wq)[0] == "stage" and tuple(wq)[-1] == "model"
+    sc = [v for k, v in by_path.items() if k.startswith("unit/0") and k.endswith("scale")][0]
+    assert tuple(sc)[0] == "stage"
+    # non-trunk leaves never pick up the stage axis
+    assert all(
+        "stage" not in tuple(v)
+        for k, v in by_path.items() if not k.startswith("unit/0")
+    )
+    # and an indivisible trunk depth (2 layers over... a fake 3-stage axis)
+    mesh3 = repro.compat.make_mesh((3,), ("stage",))
+    specs3 = param_specs(shapes, mesh3, None, None,
+                         stage_axis="stage", trunk_paths=(trunk,))
+    wq3 = jax.tree_util.tree_flatten_with_path(specs3)[0]
+    wq3 = [v for kp, v in wq3 if "wq" in str(kp)][0]
+    assert tuple(wq3)[0] is None  # 2 % 3 != 0 -> unsharded, not crashed
+
+
 def test_param_specs_divisibility_fallback(mesh2d):
     """mixtral's 8 experts on a 16-way model axis must fall back to TP over
     d_expert (here: 8 experts on 2-way model axis still shard E; force the
