@@ -1,0 +1,144 @@
+"""Compressor x layout sweep (BENCH_compressors.json).
+
+Builds the smoke-sized cnn_cifar train step for every compressor config —
+the per-shard fused-kernel default, its unfused reference, the flat-vector
+layouts, and the dense baselines — on a flat 2-worker mesh AND a 2-stage
+pipelined mesh, and records per-upload bits (paper + wire views, plus the
+transport's per-bucket report) and jitted step wall-time. The
+kernel-vs-reference speedup row is the acceptance gate for making
+``topk_impl="kernel"`` the per-shard default; run via
+
+  PYTHONPATH=src python -m benchmarks.run --compressors
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+
+def _sweep_configs():
+    from repro.core import CompressorConfig
+
+    return {
+        "topk_ef_kernel": CompressorConfig(name="topk_ef", k_ratio=0.05,
+                                           topk_impl="kernel", block_size=64),
+        "topk_ef_reference": CompressorConfig(name="topk_ef", k_ratio=0.05,
+                                              topk_impl="reference",
+                                              block_size=64),
+        "topk_ef_per_tensor_exact": CompressorConfig(
+            name="topk_ef", k_ratio=0.05, layout="per_tensor",
+            topk_impl="exact"),
+        "topk_ef_flat_global": CompressorConfig(
+            name="topk_ef", k_ratio=0.05, bucket="global", topk_impl="exact"),
+        "randk": CompressorConfig(name="randk", k_ratio=0.05),
+        "qsgd": CompressorConfig(name="qsgd"),
+        "signsgd_ef": CompressorConfig(name="signsgd_ef"),
+        "terngrad": CompressorConfig(name="terngrad"),
+        "identity": CompressorConfig(name="identity"),
+    }
+
+
+def run(stages: int = 2, steps: int = 10,
+        out_path: str = "BENCH_compressors.json") -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.compat
+    from repro.configs import get_config
+    from repro.core import SASGConfig, SelectionConfig
+    from repro.dist.strategy import choose_strategy
+    from repro.models import build
+    from repro.optim import constant
+    from repro.train import build_train_step
+
+    cfg = dataclasses.replace(get_config("cnn_cifar"), d_model=16)
+    model = build(cfg)
+
+    rng = np.random.default_rng(0)
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(8, 32, 32, 3)).astype(np.float32)),
+        "labels": jnp.asarray(rng.integers(0, 10, size=(8,)).astype(np.int32)),
+    }
+
+    mesh_flat = repro.compat.make_mesh((2,), ("data",))
+    s_flat = choose_strategy(mesh_flat, sasg_enabled=True)
+    mesh_pipe = repro.compat.make_mesh((2, stages), ("data", "stage"))
+    s_pipe = choose_strategy(
+        mesh_pipe, sasg_enabled=True, pipeline_stages=stages,
+        trunk_layers=model.pipeline.n_layers,
+    )
+    assert s_pipe.pipelined
+
+    # Build + warm every cell first, then time in interleaved round-robin
+    # rounds and keep the per-cell MIN: CPU wall-time drifts over a long
+    # process (throttling, allocator growth), so timing each config in one
+    # contiguous block would bias whichever config runs first.
+    cells = {}
+    for name, comp in _sweep_configs().items():
+        scfg = SASGConfig(compressor=comp,
+                          selection=SelectionConfig(enabled=False), name=name)
+        for mesh_name, mesh, strategy in (
+            ("flat", mesh_flat, s_flat), ("pipelined", mesh_pipe, s_pipe)
+        ):
+            built = build_train_step(model, scfg, mesh, strategy, constant(0.05))
+            state = built.init(jax.random.PRNGKey(0))
+            state, _ = built.jit_step(state, batch)      # warmup / compile
+            jax.block_until_ready(state.params)
+            cells[(name, mesh_name)] = [built, state, float("inf")]
+
+    rounds = 3
+    for _ in range(rounds):
+        for cell in cells.values():
+            built, state, best = cell
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                state, _ = built.jit_step(state, batch)
+            jax.block_until_ready(state.params)
+            cell[1] = state
+            cell[2] = min(best, (time.perf_counter() - t0) / steps)
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    results = {}
+    for name, comp in _sweep_configs().items():
+        bf, _, t_flat = cells[(name, "flat")]
+        bp, _, t_pipe = cells[(name, "pipelined")]
+        assert bf.bits_wire == bp.bits_wire
+        report = bf.exchange.transport.bits_report(params_shape)
+        results[name] = {
+            "layout": bf.exchange.transport.layout,
+            "topk_impl": comp.resolved_impl() if comp.name == "topk_ef" else None,
+            "bits_paper_per_upload": bf.bits_paper,
+            "bits_wire_per_upload": bf.bits_wire,
+            "step_time_s_flat": t_flat,
+            "step_time_s_pipelined": t_pipe,
+            "buckets": report.rows(),
+        }
+        print(f"[compressor_bench] {name:26s} flat {t_flat*1e3:7.1f} ms  "
+              f"{stages}-stage {t_pipe*1e3:7.1f} ms  "
+              f"wire {bf.bits_wire:.3e} bits/upload")
+
+    speedup = {
+        "flat": results["topk_ef_reference"]["step_time_s_flat"]
+        / results["topk_ef_kernel"]["step_time_s_flat"],
+        "pipelined": results["topk_ef_reference"]["step_time_s_pipelined"]
+        / results["topk_ef_kernel"]["step_time_s_pipelined"],
+    }
+    record = {
+        "model": "cnn_cifar(d_model=16)",
+        "stages": stages,
+        "steps_timed": steps,
+        "compressors": results,
+        "kernel_vs_reference_speedup": speedup,
+        "note": "CPU fake-device timing (Pallas kernel in interpret mode): "
+                "relative step cost only; min over interleaved rounds. "
+                "speedup >= 1.0 means the fused kernel hot path is no "
+                "slower than the unfused reference.",
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[compressor_bench] kernel-vs-reference speedup "
+          f"flat {speedup['flat']:.2f}x, pipelined {speedup['pipelined']:.2f}x "
+          f"-> {out_path}")
+    return {"compressors": record}

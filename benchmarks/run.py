@@ -2,7 +2,8 @@
 the roofline collector and the pipeline composition bench.
 
   PYTHONPATH=src python -m benchmarks.run [--full]
-  PYTHONPATH=src python -m benchmarks.run --stages 2   # BENCH_pipeline.json
+  PYTHONPATH=src python -m benchmarks.run --stages 2    # BENCH_pipeline.json
+  PYTHONPATH=src python -m benchmarks.run --compressors # BENCH_compressors.json
 """
 import argparse
 import os
@@ -17,9 +18,23 @@ def main():
     ap.add_argument("--stages", type=int, default=0,
                     help="run ONLY the pipelined-vs-flat step bench with this "
                          "many GPipe stages; writes BENCH_pipeline.json")
+    ap.add_argument("--compressors", action="store_true",
+                    help="run ONLY the compressor x layout sweep (flat and "
+                         "2-stage pipelined); writes BENCH_compressors.json")
     args = ap.parse_args()
 
     t0 = time.time()
+    if args.compressors:
+        # fake devices for the worker x stage mesh (see --stages note below)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=4"
+        )
+        from benchmarks import compressor_bench
+
+        compressor_bench.run()
+        print(f"benchmarks.run complete in {time.time()-t0:.1f}s")
+        return 0
     if args.stages:
         # fake devices for the worker x stage mesh; must precede jax import,
         # and must be APPENDED — XLA flag parsing is last-occurrence-wins, so

@@ -16,10 +16,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compressors import build_compressor
+from repro.comm import build_transport
 from repro.core.sasg import SASGConfig
 from repro.core.selection import SelectionState, advance_tau, push_window, should_send
-from repro.core.types import tree_sq_norm, tree_sub, tree_where, tree_zeros_like
+from repro.core.types import tree_sq_norm, tree_sub, tree_where
 
 
 @dataclass
@@ -36,7 +36,12 @@ class SimState:
 
 
 def make_simulator(cfg: SASGConfig, loss_fn: Callable, M: int):
-    comp = build_compressor(cfg.compressor)
+    # the in-memory stand-in for the shard_map exchange still routes layout
+    # + compression through the Transport (worker_axes unused: aggregation
+    # below is a plain mean), so payloads AND bit accounting match the
+    # distributed path for every layout, including the flat/global bucket
+    transport = build_transport(cfg.compressor, worker_axes=(), num_workers=M)
+    comp = transport.compressor
     sel = cfg.selection
 
     def init(params):
@@ -46,9 +51,8 @@ def make_simulator(cfg: SASGConfig, loss_fn: Callable, M: int):
                                            (M,) + jnp.asarray(x).shape).copy(), t
             )
 
-        comp_state = stack(comp.init(params))
-        zeros = tree_zeros_like(params, dtype=jnp.float32)
-        payload, _ = comp.compress(comp.init(params), zeros, jax.random.PRNGKey(0))
+        comp_state = stack(transport.init_state(params))
+        payload = transport.zero_payload(params)
         return SimState(
             params=params,
             comp_state=comp_state,
@@ -84,7 +88,7 @@ def make_simulator(cfg: SASGConfig, loss_fn: Callable, M: int):
 
         def per_worker(gf, cstate, cache, snd, k):
             g = jax.tree.map(lambda x: lr * x, gf) if cfg.fold_lr else gf
-            payload, cstate_new = comp.compress(cstate, g, k)
+            payload, cstate_new = transport.encode(cstate, g, k)
             payload = tree_where(snd, payload, cache)
             cstate_new = tree_where(snd, cstate_new, cstate)
             return payload, cstate_new
@@ -98,14 +102,14 @@ def make_simulator(cfg: SASGConfig, loss_fn: Callable, M: int):
         if comp.kind == "sparse":
             def densify_one(p):
                 return jax.tree.map(
-                    lambda leaf: leaf.densify().reshape(-1),
+                    lambda leaf: leaf.densify(),
                     p, is_leaf=lambda x: hasattr(x, "densify"),
                 )
 
             dense = jax.vmap(densify_one)(payloads)
-            mean_flat = jax.tree.map(lambda x: x.mean(0), dense)
-            update = jax.tree.map(
-                lambda f, t: f[: t.size].reshape(t.shape), mean_flat, params
+            mean_c = jax.tree.map(lambda x: x.mean(0), dense)
+            update = transport.densify(
+                mean_c, jax.tree.map(lambda x: x.astype(jnp.float32), params)
             )
         else:
             update = jax.tree.map(lambda x: x.mean(0), payloads)
@@ -128,8 +132,8 @@ def make_simulator(cfg: SASGConfig, loss_fn: Callable, M: int):
         return (new_params, comp_state_new, payloads, stale_params_new, tau_new,
                 window_new, step + 1, send)
 
-    bits_paper = comp.bits_paper
-    bits_wire = comp.bits_wire
+    bits_paper = transport.bits_paper
+    bits_wire = transport.bits_wire
 
     def step(state: SimState, batches, lr, key) -> SimState:
         (params, cstate, cache, sparams, tau, window, stp, send) = _step(

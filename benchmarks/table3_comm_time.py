@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import CompressorConfig, build_compressor
+from repro.core import CompressorConfig
 from repro.core.metrics import LinkModel
 from repro.core.types import tree_bytes, tree_size
 from repro.models import build
@@ -33,10 +33,12 @@ def run(out_dir="artifacts/bench", log=print):
     M, iters = 10, 100
     link = LinkModel(bandwidth_bps=1e9, latency_s=1e-4, sequential_uplink=True)
 
-    topk = build_compressor(CompressorConfig(name="topk_ef", k_ratio=0.01,
-                                             topk_impl="sharded", block_size=64))
+    from repro.comm import account
+
+    topk_cfg = CompressorConfig(name="topk_ef", k_ratio=0.01,
+                                topk_impl="sharded", block_size=64)
     dense_bits = 32.0 * d
-    sparse_bits = topk.bits_paper(params)
+    sparse_bits = account(topk_cfg, params).paper
 
     # realized skip fraction from the table2 run if available
     skip = 0.35

@@ -1,0 +1,20 @@
+"""repro.comm — the wire transport subsystem.
+
+Layering (README "The repro.comm transport seam"):
+
+    collectives  — worker-axis psum / fixed-k all-gather primitives
+    bits         — centralized per-bucket bit accounting (paper + wire views)
+    transport    — the Transport interface: layout x compressor x collectives
+                   x stage composition x bit accounting
+
+``repro.core.comm`` remains as a deprecation shim over ``collectives``.
+"""
+from .bits import BitsReport, BucketBits, account, dtype_bits
+from .collectives import dense_mean, exchange, reshape_like, sparse_allgather_mean
+from .transport import Transport, build_transport
+
+__all__ = [
+    "BitsReport", "BucketBits", "account", "dtype_bits",
+    "dense_mean", "exchange", "reshape_like", "sparse_allgather_mean",
+    "Transport", "build_transport",
+]

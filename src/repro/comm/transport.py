@@ -1,0 +1,165 @@
+"""The ``Transport`` seam: payload layout x compression x collectives.
+
+The paper's bit savings come from what crosses the wire, so everything that
+decides *wire shape* lives here, behind one interface:
+
+    encode(state, g, key)   -> (payload, candidate_state)
+    exchange(payload)       -> mean contribution (dense tree or flat vectors)
+    densify(contrib, like)  -> full-shape fp32 update tree
+    gather(g)               -> stage-combined full gradient tree
+    bits_paper / bits_wire / bits_report   (centralized, repro.comm.bits)
+
+Compressors (``repro.core.compressors``) only map values: they receive a
+tree already laid out by the transport and return payload leaves + candidate
+error-feedback state. The transport owns:
+
+- **layout** (``per_shard | per_tensor | flat``): whether leaves are
+  compressed on their shard-aligned blocked view, as per-leaf flat vectors,
+  or as one concatenated global vector (the paper-exact T_k);
+- **densification templates**: ``densify`` reshapes against the caller's
+  full *gradient* tree, never against the raw params tree — under pipeline
+  parallelism the in-region params have a stage-SLICED trunk, which is
+  exactly why the old per-compressor densify paths could not compose with
+  pipelining (the deleted ``train/step.py`` guard);
+- **stage composition**: the per-stage gradient combine (trunk all-gather +
+  stage-0-masked psum, built by ``dist.pipeline.build_stage_combine``) is
+  threaded in as ``grad_combine`` and applied by ``gather`` — the transport,
+  not ``build_pipelined_vag``, decides what the exchange sees;
+- **bit accounting**: per-bucket paper/wire bits, wire-dtype aware,
+  reporting the per-layer k-ratio schedule (``bits_report``).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import CompressorConfig, CompressorDef, build_compressor
+from repro.core.types import (
+    Tree,
+    tree_cast,
+    tree_flatten_concat,
+    tree_unflatten_concat,
+    tree_zeros_like,
+)
+
+from . import bits as bits_lib
+from . import collectives
+
+
+class Transport:
+    """One built wire transport for a (compressor, mesh role) pair."""
+
+    def __init__(
+        self,
+        cfg: CompressorConfig,
+        worker_axes: Sequence[str],
+        num_workers: int,
+        leaf_specs=None,
+        axis_sizes: Optional[dict] = None,
+        grad_combine: Optional[Callable[[Tree], Tree]] = None,
+    ):
+        self.cfg = cfg
+        self.worker_axes = tuple(worker_axes)
+        self.num_workers = num_workers
+        self.leaf_specs = leaf_specs
+        self.axis_sizes = axis_sizes or {}
+        self.grad_combine = grad_combine
+        self.compressor: CompressorDef = build_compressor(
+            cfg, leaf_specs=leaf_specs, axis_sizes=axis_sizes
+        )
+        self.kind = self.compressor.kind      # "sparse" | "dense"
+        # the REALIZED layout: compressors without a blocked impl (randk)
+        # realize per_shard configs as per_tensor flat vectors
+        self.layout = self.compressor.layout
+
+    # -- layout -------------------------------------------------------------
+
+    def _lay_out(self, tree: Tree) -> Tree:
+        """Apply the wire layout to a full-shape tree (flat = one global
+        pseudo-leaf; other layouts keep the tree structure and let the
+        compressor view each leaf)."""
+        if self.layout == "flat":
+            return {"__global__": tree_flatten_concat(tree)}
+        return tree
+
+    # -- stage composition ---------------------------------------------------
+
+    def gather(self, g: Tree) -> Tree:
+        """Combine per-stage gradient slices into the full tree the exchange
+        operates on (identity when no pipeline stage axis is threaded in)."""
+        if self.grad_combine is None:
+            return g
+        return self.grad_combine(g)
+
+    # -- encode / exchange / densify ----------------------------------------
+
+    def init_state(self, params: Tree) -> Tree:
+        """Compressor state (error-feedback buffers) for the wire layout."""
+        return self.compressor.init(self._lay_out(params))
+
+    def zero_payload(self, params: Tree) -> Tree:
+        """Payload-shaped zeros: compress a zero tree (values come out 0)."""
+        zeros = tree_zeros_like(params, dtype=jnp.float32)
+        payload, _ = self.encode(self.init_state(zeros), zeros, jax.random.PRNGKey(0))
+        return payload
+
+    def encode(self, state: Tree, g: Tree, key) -> tuple:
+        """Lay out the (full-shape) quantity tree and compress it.
+
+        Returns (payload, candidate_state); the caller commits or discards
+        the candidate state with the send/skip decision.
+        """
+        payload, cand = self.compressor.compress(state, self._lay_out(g), key)
+        return payload, cand
+
+    def exchange(self, payload: Tree) -> Tree:
+        """Worker-axis collective: psum-mean for dense payloads, fixed-k
+        all-gather + local scatter-add mean for sparse ones."""
+        return collectives.exchange(
+            payload, self.kind, self.worker_axes, self.num_workers
+        )
+
+    def densify(self, contrib: Tree, like: Tree) -> Tree:
+        """Reshape the exchanged mean contribution against ``like`` — the
+        full gradient tree (NOT the possibly stage-sliced params tree).
+        Sparse layouts come back fp32; dense contributions pass through."""
+        if self.kind == "dense":
+            return contrib
+        if self.layout == "flat":
+            update = tree_unflatten_concat(contrib["__global__"], like)
+            return tree_cast(update, jnp.float32)
+        if self.layout == "per_shard":
+            # BlockPayload densify already restored leaf shapes
+            return tree_cast(contrib, jnp.float32)
+        # per_tensor: flat vectors per leaf
+        return collectives.reshape_like(contrib, tree_cast(like, jnp.float32))
+
+    # -- bit accounting ------------------------------------------------------
+
+    def bits_report(self, template: Tree) -> bits_lib.BitsReport:
+        return bits_lib.account(
+            self.cfg, template, leaf_specs=self.leaf_specs,
+            axis_sizes=self.axis_sizes,
+        )
+
+    def bits_paper(self, template: Tree) -> float:
+        return self.bits_report(template).paper
+
+    def bits_wire(self, template: Tree) -> float:
+        return self.bits_report(template).wire
+
+
+def build_transport(
+    cfg: CompressorConfig,
+    worker_axes: Sequence[str],
+    num_workers: int,
+    leaf_specs=None,
+    axis_sizes: Optional[dict] = None,
+    grad_combine: Optional[Callable[[Tree], Tree]] = None,
+) -> Transport:
+    return Transport(
+        cfg, worker_axes, num_workers,
+        leaf_specs=leaf_specs, axis_sizes=axis_sizes, grad_combine=grad_combine,
+    )

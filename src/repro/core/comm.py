@@ -1,93 +1,19 @@
-"""Collective transport for compressed gradient exchange.
+"""Deprecation shim — the collective transport moved to ``repro.comm``.
 
-Maps the paper's PS uplink onto jax-native collectives (DESIGN.md §2):
-
-- dense payloads  -> ``lax.psum`` over the worker axes (ring all-reduce).
-- sparse payloads -> ``lax.all_gather`` of the fixed-k (values, indices)
-  pairs over the worker axes, followed by a *local* scatter-add
-  densification and 1/M mean. Per-chip wire bytes: M*k*(value+index) versus
-  ~2*d*value for the dense ring — the paper's d -> k bit saving is
-  structurally real on TPU.
-
-All functions here run *inside* a partial-auto shard_map: the worker axes
-(`pod`/`data`) are manual, the `model` axis is auto, so leaf tensors may be
-TP-sharded and XLA keeps the scatter-add local to each model shard.
+The worker-axis collectives live in :mod:`repro.comm.collectives`; payload
+layout, densification, stage composition, and bit accounting live behind the
+``Transport`` interface (:mod:`repro.comm.transport`). This module keeps the
+old ``repro.core.comm`` import path working.
 """
-from __future__ import annotations
+from repro.comm.collectives import (  # noqa: F401
+    AxisNames,
+    dense_mean,
+    exchange,
+    reshape_like,
+    sparse_allgather_mean,
+)
 
-from typing import Sequence
-
-import jax
-import jax.numpy as jnp
-
-from .topk import BlockPayload, SparsePayload, _scatter_last
-from .types import Tree
-
-
-AxisNames = Sequence[str]
-
-
-def dense_mean(tree: Tree, worker_axes: AxisNames) -> Tree:
-    """psum-mean of a dense payload across workers."""
-    return jax.tree.map(lambda x: jax.lax.pmean(x, tuple(worker_axes)), tree)
-
-
-def _is_payload(x) -> bool:
-    return isinstance(x, (SparsePayload, BlockPayload))
-
-
-def sparse_allgather_mean(payload: Tree, worker_axes: AxisNames, num_workers: int) -> Tree:
-    """All-gather fixed-k sparse payloads across workers; densify locally.
-
-    Returns the dense mean (1/M * sum_m densify(payload_m)):
-    - SparsePayload leaves -> flat vectors (caller reshapes via reshape_like);
-    - BlockPayload leaves  -> leaf-shaped dense arrays; the densify scatter
-      is shard-local (block axis aligned to the TP sharding) and the only
-      cross-worker traffic is the k-sized payload gather. Accumulation loops
-      over the (static, small) worker dim so the dense leaf is materialized
-      exactly once, not M times.
-    """
-    axes = tuple(worker_axes)
-
-    def leaf(p) -> jax.Array:
-        vals = jax.lax.all_gather(p.values, axes, tiled=False)
-        idxs = jax.lax.all_gather(p.indices, axes, tiled=False)
-        m = vals.shape[0] if len(axes) == 1 else int(
-            jnp.prod(jnp.asarray(vals.shape[: len(axes)]))
-        )
-        if isinstance(p, SparsePayload):
-            vals = vals.reshape(-1)
-            idxs = idxs.reshape(-1)
-            dense = jnp.zeros((p.size,), vals.dtype).at[idxs].add(vals, mode="drop")
-            return dense / num_workers
-        # BlockPayload: accumulate M shard-local scatters
-        vals = vals.reshape((num_workers,) + p.values.shape)
-        idxs = idxs.reshape((num_workers,) + p.indices.shape)
-        dense = _scatter_last(vals[0].astype(jnp.float32), idxs[0], p.blocked_shape[-1])
-        for mi in range(1, num_workers):
-            dense = dense + _scatter_last(
-                vals[mi].astype(jnp.float32), idxs[mi], p.blocked_shape[-1]
-            )
-        return (dense / num_workers).reshape(p.orig_shape)
-
-    return jax.tree.map(leaf, payload, is_leaf=_is_payload)
-
-
-def exchange(payload: Tree, kind: str, worker_axes: AxisNames, num_workers: int) -> Tree:
-    """Dispatch on compressor kind. Output: dense mean contribution tree.
-
-    For sparse kinds, leaves come back as *flat* vectors; the caller reshapes
-    against the parameter template (payloads erase shape by design).
-    """
-    if kind == "dense":
-        return dense_mean(payload, worker_axes)
-    elif kind == "sparse":
-        return sparse_allgather_mean(payload, worker_axes, num_workers)
-    raise ValueError(f"unknown payload kind {kind!r}")
-
-
-def reshape_like(flat_tree: Tree, template: Tree) -> Tree:
-    """Reshape a tree of flat vectors to the template's leaf shapes/dtypes."""
-    return jax.tree.map(
-        lambda f, t: f[: t.size].reshape(t.shape).astype(t.dtype), flat_tree, template
-    )
+__all__ = [
+    "AxisNames", "dense_mean", "exchange", "reshape_like",
+    "sparse_allgather_mean",
+]

@@ -1,15 +1,21 @@
 """Gradient compressors: the paper's top-k + error feedback, and baselines.
 
-A compressor is a pure-functional triple (init, compress, densify-semantics)
-packaged as a ``CompressorDef``. Compression always receives the already
-gamma-folded quantity ``g = lr * grad + error`` (paper eq. 8's g_m^t); error
-feedback state is owned by the compressor and updated *candidately*: the
-caller (sasg.py) commits or discards the candidate state depending on the
-adaptive send/skip decision.
+A compressor is a pure-functional pair (init, compress) packaged as a
+``CompressorDef``. Compression always receives the already gamma-folded
+quantity ``g = lr * grad + error`` (paper eq. 8's g_m^t); error feedback
+state is owned by the compressor and updated *candidately*: the caller
+(sasg.py) commits or discards the candidate state depending on the adaptive
+send/skip decision.
+
+Compressors only **map values**: the tree they receive is already laid out
+for the wire by the transport (``repro.comm.transport``), which owns the
+layout policy (``per_shard | per_tensor | flat``), the collectives, the
+densification templates, and all bit accounting (``repro.comm.bits``).
 
 Kinds:
-- ``sparse``: payload is a pytree of SparsePayload (fixed-k values+indices);
-  exchanged with a worker-axis all-gather then local scatter-add (comm.py).
+- ``sparse``: payload is a pytree of SparsePayload / BlockPayload leaves
+  (fixed-k values+indices); exchanged with a worker-axis all-gather then
+  local scatter-add (repro.comm.collectives).
 - ``dense``: payload is a dense tree (possibly quantize-dequantized values);
   exchanged with a plain psum. Bit accounting still reflects the encoded
   width (e.g. 1 bit/coord for signSGD), because on a real transport the
@@ -22,41 +28,63 @@ Implemented:
   qsgd         — QSGD stochastic quantization (Alistarh et al., 2017)
   signsgd_ef   — 1-bit sign with error feedback (Karimireddy et al., 2019)
   terngrad     — ternary stochastic quantization (Wen et al., 2017)
+
+``topk_ef``'s per-shard layout defaults to the fused Pallas EF+top-k kernel
+(``repro.kernels.topk_ef``; interpret-mode on CPU, real Pallas on TPU) with
+the unfused blocked operator kept as ``topk_impl="reference"`` — under the
+default fp32 ``error_dtype`` both are bit-identical (same iterative
+masked-argmax selection, same tie-breaks; property-tested in
+tests/test_comm_transport.py). With a narrower ``error_dtype`` the kernel
+accumulates the EF correction in fp32 and rounds once at the end, while the
+reference adds in ``error_dtype`` — equally valid EF semantics, but
+near-tied selections can differ between the two impls.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Any, Callable, NamedTuple, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import topk as topk_lib
-from .types import (
-    Tree,
-    ceil_div,
-    tree_flatten_concat,
-    tree_size,
-    tree_unflatten_concat,
-    tree_zeros_like,
-)
+from .types import Tree, ceil_div, tree_flatten_with_paths, tree_zeros_like
+
+_LEGACY_IMPLS = {"sharded": "reference", "block": "reference"}
 
 
 @dataclass(frozen=True)
 class CompressorConfig:
     name: str = "topk_ef"
     k_ratio: float = 0.01          # paper uses top-1% (k = 0.01 d)
-    # block granularity: the sharded impl selects kb=ceil(k_ratio*block) per
-    # block via iterative argmax, so smaller blocks keep the iteration count
-    # low (256 -> kb=3 at 1%); the flat impls use bigger blocks.
+    # Layer-wise adaptive sparsification (Shi et al., 2019): ordered
+    # (path_substring, ratio) pairs matched against the leaf's "/"-joined
+    # tree path; first match wins, k_ratio is the fallback. The flat layout
+    # has a single global bucket and ignores the schedule.
+    k_ratio_per_layer: Tuple[Tuple[str, float], ...] = ()
+    # block granularity: the per-shard impls select kb=ceil(k_ratio*block)
+    # per block via iterative argmax, so smaller blocks keep the iteration
+    # count low (256 -> kb=3 at 1%); the flat impls use bigger blocks.
     block_size: int = 256
-    # "sharded": shard-aligned blocked top-k on the leaf's natural layout —
-    #            zero resharding, the production default (DESIGN.md §2).
-    # "exact"/"block": flat-vector operators (paper-exact; small models).
-    # "kernel": flat blocked top-k through the fused Pallas kernel.
-    topk_impl: str = "sharded"
-    bucket: str = "per_tensor"     # "per_tensor" | "global"
+    # Wire layout — owned by the transport (repro.comm.transport):
+    #   "per_shard":  shard-aligned blocked view of each leaf in its natural
+    #                 layout — zero resharding, the production default.
+    #   "per_tensor": flat vector per leaf.
+    #   "flat":       one concatenated global vector (paper-exact T_k).
+    #   "" (auto):    per_shard unless a legacy topk_impl spelling implies
+    #                 otherwise. An EXPLICIT layout always wins — a
+    #                 conflicting impl (layout="per_shard", topk_impl=
+    #                 "exact") errors in make_topk_ef instead of silently
+    #                 switching layouts.
+    layout: str = ""
+    # Selection impl within the layout:
+    #   per_shard:         "kernel" (fused Pallas EF+top-k, the default)
+    #                      | "reference" (unfused blocked_topk)
+    #   per_tensor / flat: "exact" | "reference" (block-local) | "kernel"
+    # Legacy aliases still resolve: "sharded" -> per_shard + reference,
+    # "block" -> reference; "exact"/"block" imply the per_tensor layout.
+    topk_impl: str = "kernel"
+    bucket: str = "per_tensor"     # legacy: "global" -> layout="flat"
     wire_dtype: str = "float32"    # payload value dtype on the wire
     error_dtype: str = "float32"   # EF accumulator dtype
     # Beyond-paper (EXPERIMENTS.md §Perf iter 5): block-LOCAL indices fit in
@@ -65,97 +93,77 @@ class CompressorConfig:
     compact_indices: bool = False
     qsgd_levels: int = 256         # QSGD quantization levels (8-bit default)
 
-    def leaf_k(self, size: int) -> int:
-        return max(1, int(round(self.k_ratio * size)))
+    def resolved_layout(self) -> str:
+        """Wire layout with the legacy bucket/topk_impl spellings folded in.
+
+        Legacy spellings only steer the AUTO (``layout=""``) case; an
+        explicitly configured layout is never overridden by them."""
+        if self.bucket == "global":
+            return "flat"
+        if self.layout:
+            return self.layout
+        if self.topk_impl in ("exact", "block"):
+            return "per_tensor"
+        return "per_shard"
+
+    def resolved_impl(self) -> str:
+        return _LEGACY_IMPLS.get(self.topk_impl, self.topk_impl)
+
+    def ratio_for(self, path: str = "") -> float:
+        # the flat layout's single "__global__" pseudo-leaf is not a layer:
+        # the layer-wise schedule never applies to it (doc above)
+        if path != "__global__":
+            for pattern, ratio in self.k_ratio_per_layer:
+                if pattern and pattern in path:
+                    return float(ratio)
+        return self.k_ratio
+
+    def leaf_k(self, size: int, path: str = "") -> int:
+        return max(1, int(round(self.ratio_for(path) * size)))
 
 
 class CompressorDef(NamedTuple):
     name: str
-    kind: str  # "sparse" | "dense"
+    kind: str    # "sparse" | "dense"
+    # realized payload layout: "per_shard" | "per_tensor" | "flat" | "dense"
+    # (randk has no blocked impl, so per_shard configs realize per_tensor)
+    layout: str
     init: Callable[[Tree], Tree]
     # compress(state, g_tree, key) -> (payload_tree, candidate_state)
     compress: Callable[[Tree, Tree, Optional[jax.Array]], tuple[Any, Tree]]
-    # static bit accounting per upload, from a template (abstract ok) tree
-    bits_paper: Callable[[Tree], float]
-    bits_wire: Callable[[Tree], float]
 
 
 # ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------
 
-def _leaf_topk(cfg: CompressorConfig, flat: jax.Array) -> topk_lib.SparsePayload:
-    k = cfg.leaf_k(flat.size)
-    if cfg.topk_impl == "exact":
-        return topk_lib.exact_topk(flat, k)
-    elif cfg.topk_impl == "block":
-        return topk_lib.block_topk(flat, k, cfg.block_size)
-    elif cfg.topk_impl == "kernel":
-        from repro.kernels.topk_ef import ops as kops  # lazy: optional dep
+def index_dtype(cfg: CompressorConfig, block_c: int):
+    """On-wire index dtype for a payload bucket: block-LOCAL indices fit in
+    u8/u16 when compact_indices is on; the single source of truth for both
+    the payload cast (make_topk_ef) and the wire accounting (comm.bits)."""
+    if not cfg.compact_indices:
+        return jnp.int32
+    if block_c <= 256:
+        return jnp.uint8
+    if block_c <= 65536:
+        return jnp.uint16
+    return jnp.int32
 
-        return kops.block_topk(flat, k, cfg.block_size)
-    raise ValueError(f"unknown topk_impl {cfg.topk_impl!r}")
-
-
-def _maybe_global(cfg: CompressorConfig, tree: Tree) -> Tree:
-    """Collapse the tree into a single flat pseudo-leaf in global mode."""
-    if cfg.bucket == "global":
-        return {"__global__": tree_flatten_concat(tree)}
-    return tree
-
-
-def _unglobal(cfg: CompressorConfig, tree: Tree, like: Tree) -> Tree:
-    if cfg.bucket == "global":
-        return tree_unflatten_concat(tree["__global__"], like)
-    return tree
-
-
-def _total_k(cfg: CompressorConfig, template: Tree) -> int:
-    if cfg.bucket == "global":
-        d = tree_size(template)
-        if cfg.topk_impl == "block":
-            nb = ceil_div(d, cfg.block_size)
-            return nb * max(1, ceil_div(cfg.leaf_k(d), nb))
-        return cfg.leaf_k(d)
-    total = 0
-    for x in jax.tree.leaves(template):
-        k = cfg.leaf_k(x.size)
-        if cfg.topk_impl in ("block", "kernel"):
-            nb = ceil_div(x.size, cfg.block_size)
-            k = nb * min(max(1, ceil_div(k, nb)), cfg.block_size)
-        total += min(k, x.size)
-    return total
-
-
-def _dtype_bits(name: str) -> int:
-    return jnp.dtype(name).itemsize * 8
-
-
-# ---------------------------------------------------------------------------
-# identity (SGD / LASG transport)
-# ---------------------------------------------------------------------------
-
-def make_identity(cfg: CompressorConfig) -> CompressorDef:
-    def init(tree):
-        return ()
-
-    def compress(state, g, key):
-        return g, state
-
-    def bits(template):
-        return 32.0 * tree_size(template)
-
-    return CompressorDef("identity", "dense", init, compress, bits, bits)
-
-
-# ---------------------------------------------------------------------------
-# top-k with error feedback (the paper's operator)
-# ---------------------------------------------------------------------------
 
 def _is_spec(s) -> bool:
     from jax.sharding import PartitionSpec
 
     return s is None or isinstance(s, PartitionSpec)
+
+
+def _spec_leaves(leaf_specs, template) -> list:
+    """Per-leaf PartitionSpecs aligned with ``template``'s flatten order
+    (None-filled on structure mismatch or when no specs were provided)."""
+    n = len(template) if isinstance(template, list) else len(jax.tree.leaves(template))
+    if leaf_specs is None:
+        return [None] * n
+    specs = jax.tree.leaves(leaf_specs, is_leaf=_is_spec)
+    return specs if len(specs) == n else [None] * n
 
 
 def _sharded_axis_of(spec, shape, axis_sizes) -> tuple:
@@ -175,119 +183,143 @@ def _sharded_axis_of(spec, shape, axis_sizes) -> tuple:
     return found, size
 
 
-def _blocked_kb(cfg: CompressorConfig, shape: tuple, blocked: tuple) -> int:
+def _blocked_kb(cfg: CompressorConfig, shape: tuple, blocked: tuple,
+                path: str = "") -> int:
     size = 1
     for d in shape:
         size *= d
-    k = cfg.leaf_k(size)
+    k = cfg.leaf_k(size, path)
     nblocks = size // blocked[-1]
     return min(max(1, -(-k // nblocks)), blocked[-1])
 
 
-def make_topk_ef(cfg: CompressorConfig, leaf_specs=None, axis_sizes=None) -> CompressorDef:
-    edtype = jnp.dtype(cfg.error_dtype)
-    axis_sizes = axis_sizes or {}
-    sharded = cfg.topk_impl == "sharded" and cfg.bucket != "global"
+def _flat_topk(cfg: CompressorConfig, flat: jax.Array, k: int) -> topk_lib.SparsePayload:
+    impl = cfg.resolved_impl()
+    if impl == "exact":
+        return topk_lib.exact_topk(flat, k)
+    elif impl == "reference":
+        return topk_lib.block_topk(flat, k, cfg.block_size)
+    elif impl == "kernel":
+        from repro.kernels.topk_ef import ops as kops  # lazy: optional dep
+
+        return kops.block_topk(flat, k, cfg.block_size)
+    raise ValueError(f"unknown topk_impl {cfg.topk_impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# identity (SGD / LASG transport)
+# ---------------------------------------------------------------------------
+
+def make_identity(cfg: CompressorConfig) -> CompressorDef:
+    wdtype = jnp.dtype(cfg.wire_dtype)
 
     def init(tree):
-        return tree_zeros_like(_maybe_global(cfg, tree), dtype=edtype)
+        return ()
+
+    def compress(state, g, key):
+        # wire emulation: values cross the transport at wire_dtype, so the
+        # payload carries exactly that precision (round-tripped back to the
+        # compute dtype for the psum) — keeps the realized exchange
+        # consistent with the dtype-aware bits_wire accounting. No-op for
+        # the default float32 wire.
+        payload = jax.tree.map(
+            lambda x: x.astype(wdtype).astype(x.dtype)
+            if jnp.dtype(x.dtype) != wdtype else x,
+            g,
+        )
+        return payload, state
+
+    return CompressorDef("identity", "dense", "dense", init, compress)
+
+
+# ---------------------------------------------------------------------------
+# top-k with error feedback (the paper's operator)
+# ---------------------------------------------------------------------------
+
+def make_topk_ef(cfg: CompressorConfig, leaf_specs=None, axis_sizes=None) -> CompressorDef:
+    edtype = jnp.dtype(cfg.error_dtype)
+    wdtype = jnp.dtype(cfg.wire_dtype)
+    axis_sizes = axis_sizes or {}
+    layout = cfg.resolved_layout()
+    impl = cfg.resolved_impl()
+    if layout == "per_shard" and impl not in ("kernel", "reference"):
+        raise ValueError(
+            f"per_shard layout supports topk_impl 'kernel' | 'reference', "
+            f"got {cfg.topk_impl!r}"
+        )
+
+    def init(tree):
+        return tree_zeros_like(tree, dtype=edtype)
 
     def _idx_dtype(bc: int):
-        if not cfg.compact_indices:
-            return jnp.int32
-        if bc <= 256:
-            return jnp.uint8
-        if bc <= 65536:
-            return jnp.uint16
-        return jnp.int32
+        return index_dtype(cfg, bc)
 
-    def _leaf_sharded(e, x, spec):
+    def _leaf_sharded(e, x, spec, path):
+        """Blocked view of the leaf in its natural (possibly TP-sharded)
+        layout; selection + EF residual are block-local. The fused kernel
+        and the unfused reference run the same iterative masked-argmax, so
+        their payload support and residuals are bit-identical under fp32
+        error_dtype (the kernel always accumulates in fp32 — module
+        docstring)."""
         ax, axsz = _sharded_axis_of(spec, x.shape, axis_sizes)
         blocked = topk_lib.blocked_view_shape(x.shape, ax, cfg.block_size, axsz)
-        kb = _blocked_kb(cfg, x.shape, blocked)
-        g = (x.astype(edtype) + e).reshape(blocked)
-        p = topk_lib.blocked_topk(g, kb)
-        new_e = (g - topk_lib._scatter_last(
-            p.values.astype(edtype), p.indices, blocked[-1]
-        )).reshape(e.shape)
-        p = topk_lib.BlockPayload(
-            p.values.astype(jnp.dtype(cfg.wire_dtype)),
-            p.indices.astype(_idx_dtype(blocked[-1])),
+        kb = _blocked_kb(cfg, x.shape, blocked, path)
+        if impl == "kernel":
+            from repro.kernels.topk_ef import ops as kops  # lazy: optional dep
+
+            vals, idxs, new_e = kops.blocked_topk_ef(
+                x.astype(edtype).reshape(blocked), e.reshape(blocked), kb
+            )
+            new_e = new_e.astype(edtype).reshape(e.shape)
+        else:
+            g = (x.astype(edtype) + e).reshape(blocked)
+            p = topk_lib.blocked_topk(g, kb)
+            vals, idxs = p.values, p.indices
+            new_e = (g - topk_lib._scatter_last(
+                vals.astype(edtype), idxs, blocked[-1]
+            )).reshape(e.shape)
+        payload = topk_lib.BlockPayload(
+            vals.astype(wdtype), idxs.astype(_idx_dtype(blocked[-1])),
             blocked, x.shape,
         )
-        return p, new_e
+        return payload, new_e
 
-    def _leaf_flat(e, x):
-        flat = x.reshape(-1).astype(edtype) + e.reshape(-1)
-        p = _leaf_topk(cfg, flat)
-        new_e = (flat - p.densify()).reshape(e.shape)
-        wire = p.values.astype(jnp.dtype(cfg.wire_dtype))
+    def _leaf_flat(e, x, path):
+        k = cfg.leaf_k(x.size, path)
+        if impl == "kernel":
+            from repro.kernels.topk_ef import ops as kops  # lazy: optional dep
+
+            p, new_e = kops.topk_ef(
+                x.reshape(-1).astype(edtype), e.reshape(-1),
+                jnp.asarray(1.0, edtype), k, cfg.block_size,
+            )
+            new_e = new_e.astype(edtype).reshape(e.shape)
+        else:
+            flat = x.reshape(-1).astype(edtype) + e.reshape(-1)
+            p = _flat_topk(cfg, flat, k)
+            new_e = (flat - p.densify()).reshape(e.shape)
+        wire = p.values.astype(wdtype)
         return topk_lib.SparsePayload(wire, p.indices, p.size), new_e
 
     def compress(err, g, key):
-        g = _maybe_global(cfg, g)
-        flat_leaves, treedef = jax.tree.flatten(g)
+        paths, leaves, treedef = tree_flatten_with_paths(g)
         err_leaves = jax.tree.leaves(err)
-        if sharded:
-            spec_leaves = (
-                jax.tree.leaves(leaf_specs, is_leaf=_is_spec)
-                if leaf_specs is not None else [None] * len(flat_leaves)
-            )
-            if len(spec_leaves) != len(flat_leaves):
-                spec_leaves = [None] * len(flat_leaves)
+        if layout == "per_shard":
+            specs = _spec_leaves(leaf_specs, leaves)
             pairs = [
-                _leaf_sharded(e, x, s)
-                for e, x, s in zip(err_leaves, flat_leaves, spec_leaves)
+                _leaf_sharded(e, x, s, p)
+                for e, x, s, p in zip(err_leaves, leaves, specs, paths)
             ]
         else:
-            pairs = [leaf for leaf in map(_leaf_flat, err_leaves, flat_leaves)]
+            pairs = [
+                _leaf_flat(e, x, p)
+                for e, x, p in zip(err_leaves, leaves, paths)
+            ]
         payload = jax.tree.unflatten(treedef, [p for p, _ in pairs])
         new_err = jax.tree.unflatten(treedef, [e for _, e in pairs])
         return payload, new_err
 
-    def _total_k_eff(template):
-        if not sharded:
-            return _total_k(cfg, template)
-        total = 0
-        spec_leaves = (
-            jax.tree.leaves(leaf_specs, is_leaf=_is_spec)
-            if leaf_specs is not None else None
-        )
-        leaves = jax.tree.leaves(template)
-        if spec_leaves is None or len(spec_leaves) != len(leaves):
-            spec_leaves = [None] * len(leaves)
-        for x, s in zip(leaves, spec_leaves):
-            ax, axsz = _sharded_axis_of(s, x.shape, axis_sizes)
-            blocked = topk_lib.blocked_view_shape(x.shape, ax, cfg.block_size, axsz)
-            kb = _blocked_kb(cfg, x.shape, blocked)
-            total += (x.size // blocked[-1]) * kb
-        return total
-
-    def bits_paper(template):
-        return 32.0 * _total_k_eff(template)
-
-    def bits_wire(template):
-        vb = _dtype_bits(cfg.wire_dtype)
-        if not sharded:
-            return float(vb + 32) * _total_k_eff(template)
-        spec_leaves = (
-            jax.tree.leaves(leaf_specs, is_leaf=_is_spec)
-            if leaf_specs is not None else None
-        )
-        leaves = jax.tree.leaves(template)
-        if spec_leaves is None or len(spec_leaves) != len(leaves):
-            spec_leaves = [None] * len(leaves)
-        total = 0.0
-        for x, s in zip(leaves, spec_leaves):
-            ax, axsz = _sharded_axis_of(s, x.shape, axis_sizes)
-            blocked = topk_lib.blocked_view_shape(x.shape, ax, cfg.block_size, axsz)
-            kb = _blocked_kb(cfg, x.shape, blocked)
-            k_eff = (x.size // blocked[-1]) * kb
-            ib = jnp.dtype(_idx_dtype(blocked[-1])).itemsize * 8
-            total += float(vb + ib) * k_eff
-        return total
-
-    return CompressorDef("topk_ef", "sparse", init, compress, bits_paper, bits_wire)
+    return CompressorDef("topk_ef", "sparse", layout, init, compress)
 
 
 # ---------------------------------------------------------------------------
@@ -295,29 +327,31 @@ def make_topk_ef(cfg: CompressorConfig, leaf_specs=None, axis_sizes=None) -> Com
 # ---------------------------------------------------------------------------
 
 def make_randk(cfg: CompressorConfig) -> CompressorDef:
+    wdtype = jnp.dtype(cfg.wire_dtype)
+
     def init(tree):
         return ()
 
     def compress(state, g, key):
         assert key is not None, "randk requires a PRNG key"
-        g = _maybe_global(cfg, g)
-        leaves, treedef = jax.tree.flatten(g)
+        paths, leaves, treedef = tree_flatten_with_paths(g)
         keys = jax.random.split(key, len(leaves))
-        payload = [
-            topk_lib.random_k(x.reshape(-1).astype(jnp.float32), cfg.leaf_k(x.size), k)
-            for x, k in zip(leaves, keys)
-        ]
+
+        def leaf(x, p, k):
+            sp = topk_lib.random_k(
+                x.reshape(-1).astype(jnp.float32), cfg.leaf_k(x.size, p), k
+            )
+            # values cross the wire at wire_dtype, like topk_ef — keeps the
+            # payload consistent with the transport's bits_wire accounting
+            return topk_lib.SparsePayload(
+                sp.values.astype(wdtype), sp.indices, sp.size
+            )
+
+        payload = [leaf(x, p, k) for x, p, k in zip(leaves, paths, keys)]
         return jax.tree.unflatten(treedef, payload), state
 
-    def bits_paper(template):
-        if cfg.bucket == "global":
-            return 32.0 * cfg.leaf_k(tree_size(template))
-        return 32.0 * sum(cfg.leaf_k(x.size) for x in jax.tree.leaves(template))
-
-    def bits_wire(template):
-        return 2.0 * bits_paper(template)
-
-    return CompressorDef("randk", "sparse", init, compress, bits_paper, bits_wire)
+    layout = "flat" if cfg.resolved_layout() == "flat" else "per_tensor"
+    return CompressorDef("randk", "sparse", layout, init, compress)
 
 
 # ---------------------------------------------------------------------------
@@ -348,12 +382,7 @@ def make_qsgd(cfg: CompressorConfig) -> CompressorDef:
         out = [leaf(x, k) for x, k in zip(leaves, keys)]
         return jax.tree.unflatten(treedef, out), state
 
-    def bits(template):
-        d = tree_size(template)
-        n_leaves = len(jax.tree.leaves(template))
-        return (math.log2(s) + 1.0) * d + 32.0 * n_leaves
-
-    return CompressorDef("qsgd", "dense", init, compress, bits, bits)
+    return CompressorDef("qsgd", "dense", "dense", init, compress)
 
 
 # ---------------------------------------------------------------------------
@@ -379,12 +408,7 @@ def make_signsgd_ef(cfg: CompressorConfig) -> CompressorDef:
         new_err = jax.tree.unflatten(treedef, [e for _, e in pairs])
         return payload, new_err
 
-    def bits(template):
-        d = tree_size(template)
-        n_leaves = len(jax.tree.leaves(template))
-        return 1.0 * d + 32.0 * n_leaves
-
-    return CompressorDef("signsgd_ef", "dense", init, compress, bits, bits)
+    return CompressorDef("signsgd_ef", "dense", "dense", init, compress)
 
 
 # ---------------------------------------------------------------------------
@@ -411,12 +435,7 @@ def make_terngrad(cfg: CompressorConfig) -> CompressorDef:
         out = [leaf(x, k) for x, k in zip(leaves, keys)]
         return jax.tree.unflatten(treedef, out), state
 
-    def bits(template):
-        d = tree_size(template)
-        n_leaves = len(jax.tree.leaves(template))
-        return math.log2(3.0) * d + 32.0 * n_leaves
-
-    return CompressorDef("terngrad", "dense", init, compress, bits, bits)
+    return CompressorDef("terngrad", "dense", "dense", init, compress)
 
 
 _REGISTRY = {

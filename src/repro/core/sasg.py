@@ -38,8 +38,11 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from . import comm
-from .compressors import CompressorConfig, CompressorDef, build_compressor
+# submodule import (not the repro.comm package __init__) so that importing
+# repro.comm first does not cycle through repro.core -> sasg -> repro.comm
+from repro.comm.transport import Transport, build_transport
+
+from .compressors import CompressorConfig, CompressorDef
 from .selection import (
     SelectionConfig,
     SelectionState,
@@ -49,7 +52,7 @@ from .selection import (
     resolve_alphas,
     should_send,
 )
-from .types import Tree, tree_cast, tree_scale, tree_sq_norm, tree_where, tree_zeros_like
+from .types import Tree, tree_cast, tree_scale, tree_sq_norm, tree_where
 
 
 @dataclass(frozen=True)
@@ -132,6 +135,7 @@ class SASGExchange(NamedTuple):
     """Built exchange: functions to be called from the training step."""
 
     config: SASGConfig
+    transport: Transport
     compressor: CompressorDef
     num_workers: int
     worker_axes: tuple
@@ -144,15 +148,6 @@ class SASGExchange(NamedTuple):
     bits_per_upload_wire: Callable[[Tree], float]
 
 
-def _zero_payload(compressor: CompressorDef, cfg: SASGConfig, params: Tree) -> Tree:
-    """Payload-shaped zeros: compress a zero tree (values come out zero)."""
-    zeros = tree_zeros_like(params, dtype=jnp.float32)
-    state = compressor.init(zeros)
-    key = jax.random.PRNGKey(0)
-    payload, _ = compressor.compress(state, zeros, key)
-    return payload
-
-
 def build_exchange(
     cfg: SASGConfig,
     worker_axes: Sequence[str],
@@ -160,17 +155,28 @@ def build_exchange(
     num_workers: int = 1,
     leaf_specs=None,
     axis_sizes=None,
+    grad_combine=None,
 ) -> SASGExchange:
-    compressor = build_compressor(
-        cfg.compressor, leaf_specs=leaf_specs, axis_sizes=axis_sizes
+    """Build the SASG exchange over a ``repro.comm`` Transport.
+
+    ``grad_combine`` (optional) is the per-stage gradient combine under
+    pipeline parallelism (``dist.pipeline.build_stage_combine``); the
+    transport applies it so the exchange always sees the FULL gradient tree,
+    and densifies against that tree — never against the (possibly
+    stage-sliced) params tree.
+    """
+    transport = build_transport(
+        cfg.compressor, worker_axes, num_workers,
+        leaf_specs=leaf_specs, axis_sizes=axis_sizes, grad_combine=grad_combine,
     )
+    compressor = transport.compressor
     sel = cfg.selection
     worker_axes = tuple(worker_axes)
     reduce_axes = tuple(reduce_axes)
 
     def init_worker(params: Tree) -> WorkerState:
-        comp_state = compressor.init(params)
-        stale_cache = _zero_payload(compressor, cfg, params)
+        comp_state = transport.init_state(params)
+        stale_cache = transport.zero_payload(params)
         if sel.enabled:
             stale_params = tree_cast(params, jnp.dtype(cfg.stale_params_dtype))
         else:
@@ -200,9 +206,13 @@ def build_exchange(
     ):
         """One SASG exchange. Called inside shard_map (manual worker axes).
 
-        ``grad_fn(params, batch) -> (loss, grads)`` (i.e. value_and_grad)."""
+        ``grad_fn(params, batch) -> (loss, grads)`` (i.e. value_and_grad).
+
+        Under pipeline parallelism ``grad_fn`` returns per-stage gradient
+        slices; ``transport.gather`` combines them into the full tree
+        (identity otherwise)."""
         loss, g_fresh = grad_fn(params, batch)
-        g_fresh = _reduce(g_fresh)
+        g_fresh = _reduce(transport.gather(g_fresh))
         if reduce_axes:
             loss = jax.lax.pmean(loss, reduce_axes)
 
@@ -219,11 +229,11 @@ def build_exchange(
                     return x[:n]
 
                 pbatch = jax.tree.map(probe, batch)
-                g_rule_fresh = _reduce(grad_fn(params, pbatch)[1])
-                g_stale = _reduce(grad_fn(stale_p, pbatch)[1])
+                g_rule_fresh = _reduce(transport.gather(grad_fn(params, pbatch)[1]))
+                g_stale = _reduce(transport.gather(grad_fn(stale_p, pbatch)[1]))
             else:
                 g_rule_fresh = g_fresh
-                g_stale = _reduce(grad_fn(stale_p, batch)[1])
+                g_stale = _reduce(transport.gather(grad_fn(stale_p, batch)[1]))
             # alpha_d defaults to alpha_scale/lr (paper grid); lr is traced, so
             # compute rhs directly here.
             if sel.alphas is not None:
@@ -246,27 +256,17 @@ def build_exchange(
         send = send | (gstate.step == 0)
 
         # Paper eq. (8): g_m^t = gamma * grad + e_m^t (error folded inside the
-        # compressor; gamma folded here when fold_lr).
+        # compressor; gamma folded here when fold_lr). The transport owns the
+        # wire layout, the worker-axis collectives, and densification — the
+        # densify template is the FULL gradient tree ``g``, never the params
+        # tree (whose trunk is stage-sliced under pipelining).
         g = tree_scale(g_fresh, lr) if cfg.fold_lr else g_fresh
-        payload_fresh, comp_state_cand = compressor.compress(wstate.comp_state, g, key)
+        payload_fresh, comp_state_cand = transport.encode(wstate.comp_state, g, key)
 
         payload = tree_where(send, payload_fresh, wstate.stale_cache)
         comp_state_new = tree_where(send, comp_state_cand, wstate.comp_state)
 
-        mean_contrib = comm.exchange(payload, compressor.kind, worker_axes, num_workers)
-        if compressor.kind == "sparse":
-            if cfg.compressor.bucket == "global":
-                from .types import tree_unflatten_concat
-
-                update = tree_unflatten_concat(mean_contrib["__global__"], params)
-                update = tree_cast(update, jnp.float32)
-            elif cfg.compressor.topk_impl == "sharded":
-                # BlockPayload densify already restored leaf shapes
-                update = tree_cast(mean_contrib, jnp.float32)
-            else:
-                update = comm.reshape_like(mean_contrib, tree_cast(params, jnp.float32))
-        else:
-            update = mean_contrib
+        update = transport.densify(transport.exchange(payload), g)
 
         if sel.enabled:
             stale_params_new = tree_where(
@@ -293,6 +293,7 @@ def build_exchange(
 
     return SASGExchange(
         config=cfg,
+        transport=transport,
         compressor=compressor,
         num_workers=num_workers,
         worker_axes=worker_axes,
@@ -300,8 +301,8 @@ def build_exchange(
         init_worker=init_worker,
         init_global=init_global,
         run=run,
-        bits_per_upload_paper=compressor.bits_paper,
-        bits_per_upload_wire=compressor.bits_wire,
+        bits_per_upload_paper=transport.bits_paper,
+        bits_per_upload_wire=transport.bits_wire,
     )
 
 

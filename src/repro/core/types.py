@@ -116,6 +116,18 @@ def strip_worker_axis(tree: Tree) -> Tree:
     return jax.tree.map(lambda x: x[0], tree)
 
 
+def path_str(path) -> str:
+    """Render a jax tree path as the "/"-joined key string used for leaf
+    bucket names and ``CompressorConfig.k_ratio_per_layer`` matching."""
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def tree_flatten_with_paths(tree: Tree):
+    """(paths, leaves, treedef) with paths rendered via ``path_str``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [path_str(p) for p, _ in flat], [x for _, x in flat], treedef
+
+
 def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0) -> jax.Array:
     """Zero-pad ``x`` along ``axis`` so its size is a multiple of ``multiple``."""
     n = x.shape[axis]

@@ -1,14 +1,18 @@
 """Distribution layer: mesh strategies, sharding rules, pipeline parallelism.
 
-Layering (bottom-up; see README "repro.dist layering"):
+Layering (bottom-up; see README "Layering: repro.dist x the repro.comm
+transport seam"):
 
 - ``strategy``: which mesh axes are SASG workers vs auto FSDP/TP axes, and
   the flat / hierarchical / plain selection policy (``choose_strategy``).
 - ``sharding``: role-aware PartitionSpec trees for params / batches / KV
   caches, consumed by the train step, the serve engine, and the dry-runs.
 - ``pipeline``: GPipe-style microbatch pipeline parallelism over a manual
-  stage axis, composed with the SASG exchange by ``train/step.py`` through
-  ``build_pipelined_vag`` (strategy -> sharding -> pipeline -> step).
+  stage axis. The train step runs the forward/backward through
+  ``build_pipelined_vag(combine=False)`` and threads the per-stage gradient
+  combine (``build_stage_combine``) into the ``repro.comm`` Transport, which
+  applies it so the exchange always sees the full gradient tree
+  (strategy -> sharding -> pipeline -> transport -> step).
 """
 from .strategy import Strategy, choose_strategy
 from .sharding import batch_specs, cache_specs, param_specs
@@ -16,6 +20,7 @@ from .pipeline import (
     build_pipelined_forward,
     build_pipelined_loss,
     build_pipelined_vag,
+    build_stage_combine,
     pipeline_apply,
     resolve_microbatches,
 )
@@ -29,6 +34,7 @@ __all__ = [
     "build_pipelined_forward",
     "build_pipelined_loss",
     "build_pipelined_vag",
+    "build_stage_combine",
     "pipeline_apply",
     "resolve_microbatches",
 ]

@@ -140,20 +140,17 @@ def build_pipelined_loss(
     return loss_fn
 
 
-def build_pipelined_vag(
-    pdef, axis: str = "stage", microbatches: int = 0
-) -> Callable:
-    """Pipelined drop-in for ``jax.value_and_grad(model.loss_fn)`` inside the
-    worker shard_map region: returns the FULL (loss, grads) replicated over
-    the stage axis, with the trunk gradient all-gathered back to its complete
-    stacked form. The SASG exchange (selection rule, error feedback, top-k,
-    worker all-gather) then sees exactly what the non-pipelined step sees —
-    both the fresh and the stale-params auxiliary gradient call this same
-    function, preserving the paper's eq. 6/7 pairing."""
+def build_stage_combine(pdef, axis: str = "stage") -> Callable:
+    """Per-stage gradient combine: trunk slices all-gather back to the full
+    stacked form (replicated over the stage axis); everything else is a
+    stage-0-masked partial gradient and psums to its true value.
+
+    This is the stage composition the ``repro.comm`` Transport applies
+    (``Transport.gather``) so the exchange — selection rule, error feedback,
+    compression, worker all-gather, densify — always operates on the FULL
+    gradient tree, identical to the non-pipelined step."""
     from repro.dist.sharding import _path_keys
 
-    loss_fn = build_pipelined_loss(pdef, axis, microbatches)
-    vag = jax.value_and_grad(loss_fn)
     prefix = tuple(str(k) for k in pdef.trunk_path)
 
     def combine(path, x):
@@ -164,8 +161,30 @@ def build_pipelined_vag(
         # stage-0-masked partial grad -> true grad (zero on stages != 0)
         return jax.lax.psum(x, axis)
 
+    def gather(grads):
+        return jax.tree_util.tree_map_with_path(combine, grads)
+
+    return gather
+
+
+def build_pipelined_vag(
+    pdef, axis: str = "stage", microbatches: int = 0, combine: bool = True
+) -> Callable:
+    """Pipelined drop-in for ``jax.value_and_grad(model.loss_fn)`` inside the
+    worker shard_map region. With ``combine=True`` (the standalone default)
+    the returned grads are the FULL tree replicated over the stage axis
+    (trunk all-gathered via ``build_stage_combine``). The train step passes
+    ``combine=False`` and threads ``build_stage_combine`` into the exchange
+    instead: the ``repro.comm`` Transport owns the stage gather, so both the
+    fresh and the stale-params auxiliary gradient (paper eq. 6/7 pairing)
+    are combined at the transport seam."""
+    loss_fn = build_pipelined_loss(pdef, axis, microbatches)
+    vag = jax.value_and_grad(loss_fn)
+    gather = build_stage_combine(pdef, axis) if combine else None
+
     def pipelined_vag(params, batch):
         loss, g = vag(params, batch)
-        return jax.lax.psum(loss, axis), jax.tree_util.tree_map_with_path(combine, g)
+        loss = jax.lax.psum(loss, axis)
+        return loss, (gather(g) if gather is not None else g)
 
     return pipelined_vag

@@ -16,11 +16,53 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _tile_rows(n_rows: int) -> int:
+    # Interpret mode executes the grid sequentially in the XLA interpreter,
+    # so one grid step over all rows is fastest on CPU; real TPU keeps the
+    # default 8-row tiles (VMEM-sized).
+    return n_rows if _use_interpret() else 8
+
+
 def block_topk(x: jax.Array, k: int, block_size: int = 2048) -> SparsePayload:
     """Plain block top-k through the fused kernel (zero error, lr=1)."""
     p, _ = topk_ef(x, jnp.zeros_like(x, dtype=jnp.float32), jnp.float32(1.0),
                    k, block_size)
     return p
+
+
+def blocked_topk_ef(
+    grad_blocked: jax.Array,   # (*lead, nbc, block_c) — the per-shard view
+    err_blocked: jax.Array,    # same shape, EF accumulator
+    kb: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused EF + top-kb on an already shard-aligned blocked view.
+
+    The per-shard transport path: the caller has laid the leaf out as
+    ``(*lead, nbc, block_c)`` with block boundaries aligned to the sharded
+    axis (``repro.core.topk.blocked_view_shape``), and has folded the
+    learning rate into ``grad_blocked`` already (lr=1 here). Returns
+    ``(values, indices, new_err)`` with values/indices shaped
+    ``(*lead, nbc, kb)`` and block-LOCAL int32 indices — bit-identical to
+    the unfused ``blocked_topk`` + scatter-subtract reference (same
+    iterative masked-argmax, same first-index tie-break).
+    """
+    assert grad_blocked.shape == err_blocked.shape
+    lead = grad_blocked.shape[:-1]
+    bc = grad_blocked.shape[-1]
+    rows = 1
+    for d in lead:
+        rows *= d
+    g2 = grad_blocked.reshape(rows, bc).astype(jnp.float32)
+    e2 = err_blocked.reshape(rows, bc).astype(jnp.float32)
+    new_err, vals, idx = topk_ef_pallas(
+        g2, e2, jnp.float32(1.0), kb,
+        tile_blocks=_tile_rows(rows), interpret=_use_interpret(),
+    )
+    return (
+        vals.reshape(lead + (kb,)),
+        idx.reshape(lead + (kb,)),
+        new_err.reshape(grad_blocked.shape),
+    )
 
 
 def topk_ef(
@@ -41,7 +83,9 @@ def topk_ef(
     pos = jnp.arange(nb * block_size).reshape(nb, block_size)
     g2 = jnp.where(pos < d, g2, 0.0)
     e2 = jnp.where(pos < d, e2, 0.0)
-    new_err, vals, idx = topk_ef_pallas(g2, e2, lr, kb, interpret=_use_interpret())
+    new_err, vals, idx = topk_ef_pallas(
+        g2, e2, lr, kb, tile_blocks=_tile_rows(nb), interpret=_use_interpret()
+    )
     flat_idx = idx + (jnp.arange(nb, dtype=jnp.int32) * block_size)[:, None]
     in_range = flat_idx < d
     vals = jnp.where(in_range, vals, 0.0)

@@ -106,12 +106,14 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, algo: str = "sasg",
     if shp.kind == "train":
         if algo == "sasg_opt":
             # beyond-paper optimized variant (EXPERIMENTS.md §Perf iters 4-5):
-            # probe-based selection + compact wire payloads
+            # probe-based selection + compact bf16 wire payloads on the
+            # per-shard fused-kernel transport (Pallas topk_ef on TPU)
             from repro.core import CompressorConfig, SASGConfig, SelectionConfig
 
             scfg = SASGConfig(
                 compressor=CompressorConfig(
                     name="topk_ef", k_ratio=k_ratio,
+                    layout="per_shard", topk_impl="kernel",
                     wire_dtype="bfloat16", compact_indices=True,
                 ),
                 selection=SelectionConfig(
@@ -124,6 +126,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, algo: str = "sasg",
         else:
             scfg = PRESETS[algo]()
         built = build_train_step(model, scfg, mesh, strategy, constant(1e-2))
+        if built.exchange is not None:
+            record["transport"] = {
+                "kind": built.exchange.transport.kind,
+                "layout": built.exchange.transport.layout,
+                "bits_paper_per_upload": built.bits_paper,
+                "bits_wire_per_upload": built.bits_wire,
+            }
         state_shape = jax.eval_shape(built.init, jax.random.PRNGKey(0))
         state_sds = jax.tree.map(
             lambda x, sh: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sh),

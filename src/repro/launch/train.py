@@ -20,6 +20,21 @@ def main(argv=None):
     ap.add_argument("--algo", default="sasg",
                     choices=["sgd", "sparse", "lasg", "sasg"])
     ap.add_argument("--k-ratio", type=float, default=0.01)
+    ap.add_argument("--compressor", default=None,
+                    help="override the preset's compressor (topk_ef, randk, "
+                         "qsgd, signsgd_ef, terngrad, identity) — every "
+                         "compressor composes with --stages via the "
+                         "repro.comm transport")
+    ap.add_argument("--topk-impl", default=None,
+                    help="topk_ef impl: kernel (fused Pallas, default) | "
+                         "reference | exact")
+    ap.add_argument("--layout", default=None,
+                    help="wire layout: per_shard | per_tensor | flat")
+    ap.add_argument("--wire-dtype", default=None,
+                    help="payload value dtype on the wire (e.g. bfloat16)")
+    ap.add_argument("--k-ratio-per-layer", default=None,
+                    help="layer-wise k schedule: 'pattern=ratio,...' matched "
+                         "against leaf paths (Shi et al., 2019)")
     ap.add_argument("--max-delay", type=int, default=10)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--lr", type=float, default=0.01)
@@ -93,7 +108,39 @@ def main(argv=None):
         scfg = PRESETS[args.algo](k_ratio=args.k_ratio)
     else:
         scfg = PRESETS[args.algo]()
+    comp_overrides = {}
+    if args.compressor:
+        comp_overrides["name"] = args.compressor
+    if args.topk_impl:
+        comp_overrides["topk_impl"] = args.topk_impl
+    if args.layout:
+        comp_overrides["layout"] = args.layout
+    if args.wire_dtype:
+        comp_overrides["wire_dtype"] = args.wire_dtype
+    if args.k_ratio_per_layer:
+        schedule = []
+        for item in args.k_ratio_per_layer.split(","):
+            pattern, sep, ratio = item.partition("=")
+            if not sep or not pattern:
+                ap.error(f"--k-ratio-per-layer entry {item!r} is not "
+                         "'pattern=ratio'")
+            try:
+                schedule.append((pattern, float(ratio)))
+            except ValueError:
+                ap.error(f"--k-ratio-per-layer ratio {ratio!r} is not a float")
+        comp_overrides["k_ratio_per_layer"] = tuple(schedule)
+    if comp_overrides:
+        import dataclasses
+
+        scfg = dataclasses.replace(
+            scfg, compressor=dataclasses.replace(scfg.compressor, **comp_overrides)
+        )
     built = build_train_step(model, scfg, mesh, strategy, constant(args.lr))
+    if built.exchange is not None:
+        t = built.exchange.transport
+        print(f"[train] transport kind={t.kind} layout={t.layout} "
+              f"bits/upload paper={built.bits_paper:.3e} "
+              f"wire={built.bits_wire:.3e}")
 
     if cfg.family in ("mlp", "cnn"):
         # paper nets train on the synthetic classification mixture, not tokens

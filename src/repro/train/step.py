@@ -33,7 +33,11 @@ from repro.core.types import (
     tree_size,
     tree_sq_norm,
 )
-from repro.dist.pipeline import build_pipelined_vag, resolve_microbatches
+from repro.dist.pipeline import (
+    build_pipelined_vag,
+    build_stage_combine,
+    resolve_microbatches,
+)
 from repro.dist.sharding import param_specs
 from repro.dist.strategy import Strategy
 from repro.models.model import Model
@@ -154,14 +158,17 @@ def build_train_step(
 
     vag = jax.value_and_grad(model.loss_fn)
     # Inside the worker region, pipelined strategies swap value_and_grad for
-    # the stage-pipelined version: fresh and stale-params auxiliary gradients
-    # both run the GPipe forward/backward, and come back as the FULL gradient
-    # tree replicated over stages (dist/pipeline.py) — so selection, error
-    # feedback, compression, and the exchange are unchanged.
+    # the stage-pipelined version. The per-stage gradient combine (trunk
+    # all-gather + stage-0-masked psum) is NOT fused into the vag: it is
+    # threaded into the exchange as the transport's stage composition
+    # (repro.comm.Transport.gather), so the exchange always operates on —
+    # and densifies against — the FULL gradient tree, and every compressor
+    # layout composes with pipelining.
     worker_vag = (
-        build_pipelined_vag(pdef, stage, strategy.microbatches)
+        build_pipelined_vag(pdef, stage, strategy.microbatches, combine=False)
         if stage is not None else vag
     )
+    stage_combine = build_stage_combine(pdef, stage) if stage is not None else None
 
     if strategy.uses_shard_map:
         # inner_dp stays an AUTO axis: the in-pod gradient mean over it is the
@@ -180,22 +187,8 @@ def build_train_step(
                 _no_stage, pspecs, is_leaf=lambda x: isinstance(x, P)
             ),
             axis_sizes=axis_sizes,
+            grad_combine=stage_combine,
         )
-        comp = sasg_cfg.compressor
-        if stage is not None and exchange.compressor.kind == "sparse" and (
-            comp.bucket == "global" or comp.topk_impl != "sharded"
-        ):
-            # These densify paths reshape the exchanged payload against the
-            # in-region params tree, whose trunk is stage-SLICED under
-            # pipelining — the update would come out trunk-slice-shaped.
-            # Only the stage-aware default ("sharded" top-k, per-tensor
-            # buckets) and dense compressors compose today (ROADMAP).
-            raise NotImplementedError(
-                f"sparse compressor (topk_impl={comp.topk_impl!r}, "
-                f"bucket={comp.bucket!r}) does not compose with pipeline "
-                "parallelism yet; use topk_impl='sharded' with per-tensor "
-                "buckets, or a dense compressor"
-            )
         bits_paper = exchange.bits_per_upload_paper(params_shape)
         bits_wire = exchange.bits_per_upload_wire(params_shape)
     else:

@@ -30,16 +30,17 @@ def test_compact_indices_roundtrip_and_wire_bits():
     np.testing.assert_allclose(
         dense[mask], np.asarray(g["w"])[mask], rtol=2e-2
     )
-    # wire accounting: 16-bit values + 8-bit indices = 24 bits/element
-    full = build_compressor(
-        CompressorConfig(name="topk_ef", k_ratio=0.1, block_size=64,
-                         topk_impl="sharded")
-    )
-    assert comp.bits_wire(tree) == pytest.approx(
-        full.bits_wire(tree) * 24.0 / 64.0
+    # wire accounting (centralized in repro.comm.bits): 16-bit values +
+    # 8-bit indices = 24 bits/element
+    from repro.comm import account
+
+    full_cfg = CompressorConfig(name="topk_ef", k_ratio=0.1, block_size=64,
+                                topk_impl="sharded")
+    assert account(cfg, tree).wire == pytest.approx(
+        account(full_cfg, tree).wire * 24.0 / 64.0
     )
     # paper accounting unchanged (32 bits/coordinate convention)
-    assert comp.bits_paper(tree) == full.bits_paper(tree)
+    assert account(cfg, tree).paper == account(full_cfg, tree).paper
 
 
 def test_probe_selection_converges(mesh2d):

@@ -1,0 +1,290 @@
+"""repro.comm transport seam: property tests (hypothesis) for the fused
+Pallas topk_ef kernel vs the unfused reference, EF candidate-state
+commit/discard semantics, layout resolution, and the centralized
+(wire-dtype-aware) bit accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.comm import account, build_transport
+from repro.core.compressors import CompressorConfig, build_compressor
+from repro.core.topk import blocked_topk, _scatter_last
+from repro.core.types import tree_size
+from repro.kernels.topk_ef.ops import blocked_topk_ef
+
+
+# ---------------------------------------------------------------------------
+# fused kernel == unfused reference (per-shard path)
+# ---------------------------------------------------------------------------
+
+@given(
+    rows=st.integers(1, 12),
+    bc=st.sampled_from([8, 32, 128, 256]),
+    kb=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_fused_kernel_equals_unfused_reference(rows, bc, kb, seed):
+    """Same payload support, same values, and the exact EF residual
+    invariant: densify(payload) + new_err == g + e, bit-for-bit against the
+    unfused blocked_topk + scatter-subtract path."""
+    kb = min(kb, bc)
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(rows, 3, bc)).astype(np.float32))
+    e = jnp.asarray(rng.normal(size=(rows, 3, bc)).astype(np.float32)) * 0.1
+
+    vals_k, idx_k, err_k = blocked_topk_ef(g, e, kb)
+    corr = g + e
+    p_ref = blocked_topk(corr, kb)
+    err_ref = corr - _scatter_last(p_ref.values, p_ref.indices, bc)
+
+    # identical support AND identical values/indices (same tie-break)
+    assert np.array_equal(np.asarray(idx_k), np.asarray(p_ref.indices))
+    assert np.array_equal(np.asarray(vals_k), np.asarray(p_ref.values))
+    assert np.array_equal(np.asarray(err_k), np.asarray(err_ref))
+    # exact residual invariant
+    dense = _scatter_last(vals_k, idx_k, bc)
+    assert np.array_equal(np.asarray(dense + err_k), np.asarray(corr))
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    bs=st.sampled_from([16, 64]),
+    kfrac=st.floats(0.02, 0.5),
+)
+@settings(max_examples=15, deadline=None)
+def test_transport_kernel_equals_reference_end_to_end(seed, bs, kfrac):
+    """Through the full transport encode (layout + compressor): the default
+    per-shard kernel path produces bit-identical payloads and candidate EF
+    state to topk_impl='reference'."""
+    rng = np.random.default_rng(seed)
+    g = {
+        "w": jnp.asarray(rng.normal(size=(24, 48)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(37,)).astype(np.float32)),
+    }
+    out = {}
+    for impl in ("kernel", "reference"):
+        cfg = CompressorConfig(name="topk_ef", k_ratio=kfrac, block_size=bs,
+                               topk_impl=impl)
+        t = build_transport(cfg, ("data",), 1)
+        out[impl] = t.encode(t.init_state(g), g, jax.random.PRNGKey(0))
+    (pk, ck), (pr, cr) = out["kernel"], out["reference"]
+    for leaf in g:
+        assert np.array_equal(np.asarray(pk[leaf].values), np.asarray(pr[leaf].values))
+        assert np.array_equal(np.asarray(pk[leaf].indices), np.asarray(pr[leaf].indices))
+        assert np.array_equal(np.asarray(ck[leaf]), np.asarray(cr[leaf]))
+
+
+# ---------------------------------------------------------------------------
+# candidate-state commit/discard semantics under send/skip
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**16), impl=st.sampled_from(["kernel", "reference"]))
+@settings(max_examples=10, deadline=None)
+def test_candidate_state_commit_and_discard(seed, impl):
+    """The compressor updates EF state *candidately* (sasg.py commits or
+    discards with the send decision):
+
+    - discard (skip): recompressing a new gradient from the UNCHANGED state
+      is identical to never having produced the discarded candidate;
+    - commit (send): the residual telescopes — densify(p_t) + e_{t+1}
+      == g_t + e_t exactly, every committed step.
+    """
+    rng = np.random.default_rng(seed)
+    cfg = CompressorConfig(name="topk_ef", k_ratio=0.1, block_size=16,
+                           topk_impl=impl)
+    t = build_transport(cfg, ("data",), 1)
+    shape = (8, 24)
+    g1 = {"w": jnp.asarray(rng.normal(size=shape).astype(np.float32))}
+    g2 = {"w": jnp.asarray(rng.normal(size=shape).astype(np.float32))}
+    key = jax.random.PRNGKey(0)
+
+    e0 = t.init_state(g1)
+    p1, e1_cand = t.encode(e0, g1, key)
+
+    # skip branch: e0 is kept; the candidate leaves no trace
+    p2_skip, _ = t.encode(e0, g2, key)
+    p2_fresh, _ = t.encode(t.init_state(g1), g2, key)
+    assert np.array_equal(np.asarray(p2_skip["w"].values),
+                          np.asarray(p2_fresh["w"].values))
+    assert np.array_equal(np.asarray(p2_skip["w"].indices),
+                          np.asarray(p2_fresh["w"].indices))
+
+    # commit branch: exact telescoping residual invariant
+    dense1 = np.asarray(p1["w"].densify()).reshape(shape)
+    np.testing.assert_array_equal(
+        dense1 + np.asarray(e1_cand["w"]), np.asarray(g1["w"])
+    )
+    p2, e2_cand = t.encode(e1_cand, g2, key)
+    dense2 = np.asarray(p2["w"].densify()).reshape(shape)
+    np.testing.assert_allclose(
+        dense2 + np.asarray(e2_cand["w"]),
+        np.asarray(g2["w"]) + np.asarray(e1_cand["w"]),
+        rtol=0, atol=0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# layout resolution (legacy spellings) and densify templates
+# ---------------------------------------------------------------------------
+
+def test_layout_resolution_legacy_spellings():
+    assert CompressorConfig().resolved_layout() == "per_shard"
+    assert CompressorConfig().resolved_impl() == "kernel"
+    assert CompressorConfig(topk_impl="sharded").resolved_layout() == "per_shard"
+    assert CompressorConfig(topk_impl="sharded").resolved_impl() == "reference"
+    assert CompressorConfig(topk_impl="exact").resolved_layout() == "per_tensor"
+    assert CompressorConfig(topk_impl="block").resolved_impl() == "reference"
+    assert CompressorConfig(bucket="global").resolved_layout() == "flat"
+    assert CompressorConfig(layout="flat").resolved_layout() == "flat"
+    # an explicit layout is never silently overridden by a legacy impl
+    # spelling: the conflict errors instead of switching layouts
+    explicit = CompressorConfig(layout="per_shard", topk_impl="exact")
+    assert explicit.resolved_layout() == "per_shard"
+    with pytest.raises(ValueError, match="per_shard layout"):
+        build_compressor(explicit)
+    assert CompressorConfig(layout="per_tensor",
+                            topk_impl="sharded").resolved_layout() == "per_tensor"
+    with pytest.raises(ValueError, match="per_shard layout"):
+        build_compressor(CompressorConfig(layout="per_shard", topk_impl="bogus"))
+
+
+def test_densify_uses_gradient_template_not_params():
+    """The transport reshapes sparse contributions against the gradient
+    template handed to ``densify`` — the stage-sliced-params failure mode the
+    old train/step.py guard protected against cannot occur."""
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(6, 10)).astype(np.float32))}
+    cfg = CompressorConfig(name="topk_ef", k_ratio=0.2, layout="per_tensor",
+                           topk_impl="exact")
+    t = build_transport(cfg, ("data",), 1)
+    p, _ = t.encode(t.init_state(g), g, jax.random.PRNGKey(0))
+    flat_contrib = {"w": p["w"].densify()}   # what the all-gather mean yields
+    upd = t.densify(flat_contrib, g)
+    assert upd["w"].shape == g["w"].shape and upd["w"].dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# centralized, wire-dtype-aware bit accounting
+# ---------------------------------------------------------------------------
+
+def _tree(sizes):
+    return {f"l{i}": jnp.zeros(s) for i, s in enumerate(sizes)}
+
+
+def test_identity_bits_wire_is_dtype_aware():
+    """The old accounting hard-coded 32 bits/coord for identity regardless
+    of wire_dtype; bits_wire must charge the configured width — and the
+    payload must actually carry only that precision (wire emulation)."""
+    tree = _tree([(64, 32), (100,)])
+    d = tree_size(tree)
+    f32 = account(CompressorConfig(name="identity"), tree)
+    bf16 = account(CompressorConfig(name="identity", wire_dtype="bfloat16"), tree)
+    assert f32.paper == f32.wire == 32.0 * d
+    assert bf16.paper == 32.0 * d            # paper convention is fixed
+    assert bf16.wire == 16.0 * d
+    g = {"w": jnp.full((4,), 1.0 + 2**-10, jnp.float32)}  # not bf16-exact
+    tb = build_transport(CompressorConfig(name="identity",
+                                          wire_dtype="bfloat16"), ("data",), 1)
+    p, _ = tb.encode(tb.init_state(g), g, None)
+    assert p["w"].dtype == jnp.float32       # round-tripped for the psum
+    np.testing.assert_array_equal(
+        np.asarray(p["w"]), np.asarray(g["w"].astype(jnp.bfloat16), np.float32)
+    )
+    tf = build_transport(CompressorConfig(name="identity"), ("data",), 1)
+    pf, _ = tf.encode(tf.init_state(g), g, None)
+    np.testing.assert_array_equal(np.asarray(pf["w"]), np.asarray(g["w"]))
+
+
+def test_qsgd_bits_wire_is_dtype_aware():
+    tree = _tree([(64, 32), (100,)])
+    d, n_leaves = tree_size(tree), 2
+    per_coord = np.log2(256) + 1.0
+    f32 = account(CompressorConfig(name="qsgd"), tree)
+    bf16 = account(CompressorConfig(name="qsgd", wire_dtype="bfloat16"), tree)
+    assert f32.paper == pytest.approx(per_coord * d + 32.0 * n_leaves)
+    assert f32.wire == pytest.approx(per_coord * d + 32.0 * n_leaves)
+    # quantized coordinates keep their encoded width; the per-leaf norm
+    # scalar is a wire value and pays wire_dtype
+    assert bf16.wire == pytest.approx(per_coord * d + 16.0 * n_leaves)
+    assert bf16.paper == f32.paper
+
+
+def test_dense_scalar_overheads_dtype_aware():
+    tree = _tree([(32, 8)])
+    d = tree_size(tree)
+    sg = account(CompressorConfig(name="signsgd_ef", wire_dtype="bfloat16"), tree)
+    tg = account(CompressorConfig(name="terngrad", wire_dtype="bfloat16"), tree)
+    assert sg.wire == pytest.approx(1.0 * d + 16.0)
+    assert tg.wire == pytest.approx(np.log2(3.0) * d + 16.0)
+
+
+def test_topk_wire_bits_value_dtype_and_indices():
+    tree = _tree([(8, 128)])
+    base = CompressorConfig(name="topk_ef", k_ratio=0.1, block_size=64,
+                            topk_impl="reference")
+    r32 = account(base, tree)
+    rbf = account(dataclasses.replace(base, wire_dtype="bfloat16"), tree)
+    rcp = account(dataclasses.replace(base, wire_dtype="bfloat16",
+                                      compact_indices=True), tree)
+    k = r32.buckets[0].k
+    assert r32.wire == pytest.approx((32 + 32) * k)
+    assert rbf.wire == pytest.approx((16 + 32) * k)
+    assert rcp.wire == pytest.approx((16 + 8) * k)   # block 64 -> u8 indices
+    assert r32.paper == rbf.paper == rcp.paper == pytest.approx(32 * k)
+
+
+def test_per_layer_k_ratio_schedule_reported_per_bucket():
+    """Shi et al.-style layer-wise k ratios: applied by the compressor and
+    visible in the transport's per-bucket report."""
+    tree = {"dense": jnp.zeros((64, 64)), "head": jnp.zeros((64, 64))}
+    cfg = CompressorConfig(
+        name="topk_ef", k_ratio=0.01, block_size=64, topk_impl="reference",
+        k_ratio_per_layer=(("head", 0.25),),
+    )
+    rep = account(cfg, tree)
+    rows = {r["bucket"]: r for r in rep.rows()}
+    assert rows["head"]["k"] == 1024 and rows["head"]["k_ratio"] == 0.25
+    assert rows["dense"]["k"] < rows["head"]["k"]
+    # the schedule drives the actual payload, not just the report
+    t = build_transport(cfg, ("data",), 1)
+    rng = np.random.default_rng(1)
+    g = {k: jnp.asarray(rng.normal(size=v.shape).astype(np.float32))
+         for k, v in tree.items()}
+    p, _ = t.encode(t.init_state(g), g, jax.random.PRNGKey(0))
+    assert p["head"].values.size == rows["head"]["k"]
+    assert p["dense"].values.size == rows["dense"]["k"]
+
+
+def test_flat_layout_ignores_k_schedule():
+    """The flat layout's single "__global__" pseudo-leaf is not a layer: the
+    layer-wise schedule must not match it (even with a pattern that is a
+    substring of "__global__"), and payload size must agree with the
+    accounting."""
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(50, 40)).astype(np.float32))}
+    cfg = CompressorConfig(
+        name="topk_ef", k_ratio=0.01, layout="flat", topk_impl="exact",
+        k_ratio_per_layer=(("glob", 0.25),),
+    )
+    rep = account(cfg, g)
+    assert rep.buckets[0].k == 20                    # 1% of 2000, not 25%
+    t = build_transport(cfg, ("data",), 1)
+    p, _ = t.encode(t.init_state(g), g, jax.random.PRNGKey(0))
+    assert p["__global__"].values.size == rep.buckets[0].k
+    assert rep.paper == 32.0 * rep.buckets[0].k
+
+
+def test_transport_bits_match_report_totals():
+    tree = _tree([(16, 32), (50,)])
+    for name in ("topk_ef", "randk", "identity", "qsgd", "signsgd_ef", "terngrad"):
+        cfg = CompressorConfig(name=name, k_ratio=0.1)
+        t = build_transport(cfg, ("data",), 1)
+        rep = t.bits_report(tree)
+        assert t.bits_paper(tree) == rep.paper
+        assert t.bits_wire(tree) == rep.wire
+        assert rep.paper > 0 and rep.wire > 0

@@ -1,0 +1,86 @@
+"""Hierarchical x pipeline composition (ROADMAP open item): on a 16-device
+(pod, data, stage, model) mesh, the pipelined hierarchical SASG step must
+reproduce the non-pipelined hierarchical run — same send/skip decisions,
+same bits counters, params to the top-k tie-flip tolerance (the same
+equality tiers as tests/test_pipeline_sasg.py).
+
+Runs in a SUBPROCESS because the 16 fake CPU devices must be forced before
+jax imports (conftest pins the session to 8), and is marked slow (two
+multi-minute XLA compiles on the 4-axis mesh).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import dataclasses
+import numpy as np
+import jax, jax.numpy as jnp
+import repro.compat
+from repro.configs import get_config
+from repro.core import sasg_config
+from repro.dist.strategy import choose_strategy
+from repro.models import build
+from repro.optim import constant
+from repro.train import build_train_step
+
+model = build(dataclasses.replace(get_config("cnn_cifar"), d_model=16))
+scfg = sasg_config(k_ratio=0.05, max_delay=4)
+
+mesh_flat = repro.compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+mesh_pipe = repro.compat.make_mesh((2, 2, 2, 2), ("pod", "data", "stage", "model"))
+
+s_flat = choose_strategy(mesh_flat, sasg_enabled=True)
+s_pipe = choose_strategy(mesh_pipe, sasg_enabled=True, pipeline_stages=2,
+                         trunk_layers=model.pipeline.n_layers)
+assert s_flat.name == s_pipe.name == "hierarchical", (s_flat.name, s_pipe.name)
+assert s_pipe.pipelined and s_pipe.pipeline_stages == 2
+assert s_flat.num_workers == s_pipe.num_workers == 2
+
+bf = build_train_step(model, scfg, mesh_flat, s_flat, constant(0.05))
+bp = build_train_step(model, scfg, mesh_pipe, s_pipe, constant(0.05))
+assert bf.bits_wire == bp.bits_wire and bf.bits_paper == bp.bits_paper
+
+sf, sp = bf.init(jax.random.PRNGKey(0)), bp.init(jax.random.PRNGKey(0))
+
+def max_diff(sa, sb):
+    return max(
+        float(np.max(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
+        for a, b in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sb.params))
+    )
+
+assert max_diff(sf, sp) == 0.0
+rng = np.random.default_rng(0)
+for _ in range(3):
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(8, 32, 32, 3)).astype(np.float32)),
+        "labels": jnp.asarray(rng.integers(0, 10, size=(8,)).astype(np.int32)),
+    }
+    sf, mf = bf.jit_step(sf, batch)
+    sp, mp = bp.jit_step(sp, batch)
+    assert float(mf["num_sent"]) == float(mp["num_sent"]), "send decisions diverged"
+    d = max_diff(sf, sp)
+    assert d < 2e-2, f"params diverged: {d}"
+assert float(sf.counters.rounds) == float(sp.counters.rounds)
+np.testing.assert_allclose(float(sf.counters.bits_wire),
+                           float(sp.counters.bits_wire), rtol=1e-6)
+print("HIER_PIPE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_hierarchical_pipeline_matches_flat_hierarchical():
+    p = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_SCRIPT)],
+        capture_output=True, text=True, timeout=1800,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert p.returncode == 0 and "HIER_PIPE_OK" in p.stdout, (
+        f"stdout:\n{p.stdout[-4000:]}\nstderr:\n{p.stderr[-4000:]}"
+    )

@@ -20,7 +20,13 @@ import pytest
 
 import repro.compat
 from repro.configs import get_config
-from repro.core import lasg_config, sasg_config
+from repro.core import (
+    CompressorConfig,
+    SASGConfig,
+    SelectionConfig,
+    lasg_config,
+    sasg_config,
+)
 from repro.data import token_stream
 from repro.dist.strategy import Strategy, choose_strategy
 from repro.models import build
@@ -215,10 +221,79 @@ def test_build_train_step_rejects_bad_pipeline_configs(mesh_pipe2):
     with pytest.raises(ValueError, match="PipelineDef"):
         build_train_step(fc, scfg, mesh_pipe2, ok2, constant(0.05))
 
-    # sparse densify paths that reshape against the (stage-sliced) params
-    # tree are rejected until they are made stage-aware
-    bad_comp = dataclasses.replace(
+    # the old topk_impl/bucket guard is gone: flat-vector sparse layouts now
+    # densify against the transport's full-gradient template, so they build
+    # (and match the flat run — test_pipelined_compressors_match_flat)
+    flat_comp = dataclasses.replace(
         scfg, compressor=dataclasses.replace(scfg.compressor, topk_impl="exact")
     )
-    with pytest.raises(NotImplementedError, match="does not compose"):
-        build_train_step(model, bad_comp, mesh_pipe2, ok2, constant(0.05))
+    built = build_train_step(model, flat_comp, mesh_pipe2, ok2, constant(0.05))
+    assert built.exchange.transport.layout == "per_tensor"
+
+
+# every sparse layout x impl (plus the stochastic baselines) must reproduce
+# the flat run under pipelining — the transport seam's acceptance matrix
+_COMPRESSORS = {
+    "topk_kernel": CompressorConfig(name="topk_ef", k_ratio=0.05,
+                                    topk_impl="kernel", block_size=64),
+    "topk_reference": CompressorConfig(name="topk_ef", k_ratio=0.05,
+                                       topk_impl="reference", block_size=64),
+    "topk_exact_per_tensor": CompressorConfig(name="topk_ef", k_ratio=0.05,
+                                              layout="per_tensor",
+                                              topk_impl="exact"),
+    "topk_flat_global": CompressorConfig(name="topk_ef", k_ratio=0.05,
+                                         bucket="global", topk_impl="exact"),
+    "randk": CompressorConfig(name="randk", k_ratio=0.05),
+    "qsgd": CompressorConfig(name="qsgd"),
+}
+
+
+@pytest.mark.parametrize("comp", sorted(_COMPRESSORS))
+def test_pipelined_compressors_match_flat(comp, mesh_flat1d, mesh_pipe2):
+    """2-stage pipelined step == flat step for every compressor layout the
+    old train/step.py guard used to reject (plus the per-shard defaults):
+    same sends, same bits counters, params to the tie-flip tolerance."""
+    model = _cnn_model()
+    scfg = SASGConfig(compressor=_COMPRESSORS[comp],
+                      selection=SelectionConfig(enabled=False), name=comp)
+    bf, bp = _pair(model, scfg, mesh_flat1d, mesh_pipe2, 2)
+    assert bf.bits_wire == bp.bits_wire and bf.bits_paper == bp.bits_paper
+    sf, sp = bf.init(jax.random.PRNGKey(0)), bp.init(jax.random.PRNGKey(0))
+    assert _max_param_diff(sf, sp) == 0.0
+    for batch in _cnn_batches(3):
+        sf, mf = bf.jit_step(sf, batch)
+        sp, mp = bp.jit_step(sp, batch)
+        assert float(mf["num_sent"]) == float(mp["num_sent"])
+        np.testing.assert_allclose(float(mf["loss"]), float(mp["loss"]),
+                                   rtol=1e-2)
+        assert _max_param_diff(sf, sp) < 2e-2
+    assert float(sf.counters.rounds) == float(sp.counters.rounds)
+    np.testing.assert_allclose(float(sf.counters.bits_wire),
+                               float(sp.counters.bits_wire), rtol=1e-6)
+
+
+def test_kernel_and_reference_impls_agree_pipelined(mesh_pipe2):
+    """The fused Pallas per-shard path (topk_impl='kernel', the default) is
+    bit-compatible with the unfused reference through the full pipelined
+    train step: same sends, same bits, same params."""
+    model = _cnn_model()
+    built = {}
+    for impl in ("kernel", "reference"):
+        scfg = sasg_config(k_ratio=0.05, max_delay=4)
+        scfg = dataclasses.replace(
+            scfg, compressor=dataclasses.replace(scfg.compressor, topk_impl=impl)
+        )
+        s_pipe = choose_strategy(
+            mesh_pipe2, sasg_enabled=True, pipeline_stages=2,
+            trunk_layers=model.pipeline.n_layers,
+        )
+        built[impl] = build_train_step(model, scfg, mesh_pipe2, s_pipe,
+                                       constant(0.05))
+    sk = built["kernel"].init(jax.random.PRNGKey(0))
+    sr = built["reference"].init(jax.random.PRNGKey(0))
+    for batch in _cnn_batches(3):
+        sk, mk = built["kernel"].jit_step(sk, batch)
+        sr, mr = built["reference"].jit_step(sr, batch)
+        assert float(mk["num_sent"]) == float(mr["num_sent"])
+        assert _max_param_diff(sk, sr) < 1e-6
+    assert built["kernel"].bits_wire == built["reference"].bits_wire
