@@ -1,0 +1,20 @@
+"""Static analysis for distributed correctness (`python -m repro.analysis`).
+
+Two cooperating passes keep the paper's headline quantity — communication
+bits — honest:
+
+- **Pass 1, AST lint** (:mod:`repro.analysis.lint` + ``rules/``): source-level
+  rules over ``src/repro`` for distributed-JAX correctness: hardcoded
+  collective axis names, tracer-unsafe host patterns inside traced step
+  code, d-sized (full-gradient-shaped) collectives outside the
+  ``repro.comm`` Transport seam, and compressor/bits registry consistency.
+- **Pass 2, HLO collective audit** (:mod:`repro.analysis.hlo_audit`):
+  compile a small config x strategy matrix, attribute every collective in
+  the optimized HLO to a mesh axis, and cross-check the wire bytes that
+  actually cross links against the analytic ``repro.comm.bits`` counters.
+
+Known, intentionally-accepted findings live in ``baseline.json`` next to
+this package; ``--check`` gates CI on anything not in the baseline.
+"""
+from .findings import Finding, load_baseline  # noqa: F401
+from .lint import run_lint  # noqa: F401

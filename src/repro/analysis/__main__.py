@@ -1,0 +1,125 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""CLI for the repro.analysis passes.
+
+CI lint lane (exit non-zero on any non-baselined lint finding, any exchange
+wire drift > 1%, or any unaccounted d-sized collective):
+
+  PYTHONPATH=src python -m repro.analysis --check
+
+Other modes:
+
+  --lint-only / --audit-only     run just one pass
+  --write-baseline               refresh analysis/baseline.json from the
+                                 current sweep (new entries get a TODO
+                                 justification to fill in before commit)
+  --report PATH                  where to write the audit report
+                                 (default: BENCH_comm_audit.json in CWD)
+  --lint-report PATH             optionally dump the lint findings as JSON
+                                 (sorted + stable: two runs are byte-equal)
+"""
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--check", action="store_true",
+                    help="gate mode: non-zero exit on findings/drift")
+    ap.add_argument("--lint-only", action="store_true")
+    ap.add_argument("--audit-only", action="store_true")
+    ap.add_argument("--write-baseline", action="store_true")
+    ap.add_argument("--report", default="BENCH_comm_audit.json")
+    ap.add_argument("--lint-report", default=None)
+    ap.add_argument("--root", default=None,
+                    help="source root to lint (default: this repro's src)")
+    ap.add_argument("--tol", type=float, default=None,
+                    help="exchange drift tolerance (default 0.01)")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.findings import (
+        load_baseline,
+        split_by_baseline,
+        write_baseline,
+    )
+    from repro.analysis.lint import report_rows, run_lint
+
+    failed = False
+    findings = []
+    if not args.audit_only:
+        findings = run_lint(root=args.root)
+        baseline = load_baseline()
+        new, accepted = split_by_baseline(findings, baseline)
+        stale = baseline.stale(findings)
+        print(f"[lint] {len(findings)} finding(s): {len(new)} new, "
+              f"{len(accepted)} baselined, {len(stale)} stale baseline "
+              f"entr{'y' if len(stale) == 1 else 'ies'}")
+        for f in new:
+            print(f"  NEW  {f}")
+        for fp in stale:
+            ent = baseline.entries[fp]
+            print(f"  STALE baseline entry {fp} ({ent.get('rule')} "
+                  f"{ent.get('path')}) no longer fires — prune it")
+        if args.lint_report:
+            payload = json.dumps(
+                {"findings": report_rows(findings)},
+                indent=1, sort_keys=True,
+            ) + "\n"
+            with open(args.lint_report, "w", encoding="utf-8") as fh:
+                fh.write(payload)
+        if new or stale:
+            failed = True
+
+    audit_report = None
+    if not args.lint_only:
+        from repro.analysis import hlo_audit
+
+        tol = args.tol if args.tol is not None else hlo_audit.DEFAULT_TOL
+        audit_report = hlo_audit.run_audit(tol=tol)
+        problems = hlo_audit.check_report(audit_report)
+        with open(args.report, "w", encoding="utf-8") as fh:
+            json.dump(audit_report, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        ncells = len(audit_report["cells"])
+        print(f"[audit] {ncells} cell(s) -> {args.report}")
+        for name, rec in sorted(audit_report["cells"].items()):
+            print(f"  {name}: drift {100 * rec['drift']:.3f}% "
+                  f"(HLO {rec['hlo_exchange_wire_bytes']:.0f} B vs "
+                  f"counters {rec['expected_exchange_wire_bytes']:.0f} B), "
+                  f"{len(rec['dsized_collectives'])} d-sized op(s) "
+                  f"{'allowed' if rec['allow_dsized'] else 'forbidden'}")
+        for p in problems:
+            print(f"  FAIL {p}")
+        if problems:
+            failed = True
+
+    if args.write_baseline:
+        audit_summary = None
+        if audit_report is not None:
+            audit_summary = {
+                name: {
+                    "drift": rec["drift"],
+                    "dsized_collectives": rec["dsized_collectives"],
+                }
+                for name, rec in sorted(audit_report["cells"].items())
+            }
+        path = write_baseline(findings, audit=audit_summary)
+        print(f"[baseline] wrote {len(findings)} entr"
+              f"{'y' if len(findings) == 1 else 'ies'} -> {path}")
+        return 0
+
+    if args.check and failed:
+        print("analysis: FAILED (see findings above)")
+        return 1
+    print("analysis: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,108 @@
+"""Shared AST helpers for lint rules."""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+# jax.lax collectives that move *data* across devices (axis_index/axis_size
+# are metadata queries: they take an axis name but move no payload)
+DATA_COLLECTIVES = frozenset(
+    {"psum", "pmean", "pmax", "pmin", "psum_scatter", "all_gather",
+     "ppermute", "pshuffle", "all_to_all"}
+)
+AXIS_QUERIES = frozenset({"axis_index", "axis_size"})
+COLLECTIVES = DATA_COLLECTIVES | AXIS_QUERIES
+
+# argument slot of the axis name per collective (positional, 0-based)
+_AXIS_ARG_POS = {name: 1 for name in DATA_COLLECTIVES}
+_AXIS_ARG_POS.update({name: 0 for name in AXIS_QUERIES})
+_AXIS_KWARGS = ("axis_name", "axis")
+
+
+def attr_chain(node: ast.AST) -> Tuple[str, ...]:
+    """('jax', 'lax', 'psum') for ``jax.lax.psum``; () when not a pure
+    Name/Attribute chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def collective_name(call: ast.Call) -> Optional[str]:
+    """The collective's name if ``call`` invokes a jax/lax collective.
+
+    Matches ``jax.lax.<op>``, ``lax.<op>``, and bare ``<op>`` imported from
+    jax.lax (``from jax.lax import psum``) — the bare form only for names
+    that are unambiguous collectives.
+    """
+    chain = attr_chain(call.func)
+    if not chain:
+        return None
+    name = chain[-1]
+    if name not in COLLECTIVES:
+        return None
+    root = chain[0]
+    if len(chain) == 1:
+        return name  # bare import; collective names are distinctive enough
+    if root in ("jax", "lax"):
+        return name
+    return None
+
+
+def axis_argument(call: ast.Call, name: str) -> Optional[ast.AST]:
+    """The axis-name argument expression of a collective call, if present."""
+    for kw in call.keywords:
+        if kw.arg in _AXIS_KWARGS:
+            return kw.value
+    pos = _AXIS_ARG_POS.get(name)
+    if pos is not None and len(call.args) > pos:
+        return call.args[pos]
+    return None
+
+
+def string_literals(node: ast.AST) -> List[str]:
+    """All string constants anywhere inside ``node``."""
+    return [
+        n.value for n in ast.walk(node)
+        if isinstance(n, ast.Constant) and isinstance(n.value, str)
+    ]
+
+
+def is_numeric_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float, bool, complex))
+    if isinstance(node, ast.UnaryOp) and isinstance(node.operand, ast.Constant):
+        return isinstance(node.operand.value, (int, float, complex))
+    return False
+
+
+class ScopedVisitor(ast.NodeVisitor):
+    """NodeVisitor that tracks the enclosing qualname (functions/classes)."""
+
+    def __init__(self) -> None:
+        self._stack: List[str] = []
+
+    @property
+    def qualname(self) -> str:
+        return ".".join(self._stack) if self._stack else "<module>"
+
+    def _scoped(self, node, label: str) -> None:
+        self._stack.append(label)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    def visit_FunctionDef(self, node):       # noqa: N802 (ast API casing)
+        self._scoped(node, node.name)
+
+    def visit_AsyncFunctionDef(self, node):  # noqa: N802
+        self._scoped(node, node.name)
+
+    def visit_ClassDef(self, node):          # noqa: N802
+        self._scoped(node, node.name)
+
+    def visit_Lambda(self, node):            # noqa: N802
+        self._scoped(node, "<lambda>")

@@ -1,0 +1,45 @@
+"""Rule ``axis-name``: no hardcoded collective axis names.
+
+Every ``psum``/``all_gather``/``ppermute``/``axis_index``/``axis_size``/...
+axis name must be *bound* — threaded in from the strategy
+(`dist.strategy.Strategy`) or an enclosing ``shard_map`` parameter — never a
+string literal at the collective call site. A literal axis name silently
+breaks when `choose_strategy` renames/carves axes (e.g. the pipeline
+``stage`` carve), and is invisible to the mesh-role bookkeeping.
+
+A literal appearing as a *parameter default* (``def f(axis="stage")``) is
+fine: the caller can rebind it, so the collective site itself stays generic.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.findings import Finding
+
+from ._common import ScopedVisitor, axis_argument, collective_name, string_literals
+
+
+class _Visitor(ScopedVisitor):
+    def __init__(self, ctx):
+        super().__init__()
+        self.ctx = ctx
+        self.findings: List[Finding] = []
+
+    def visit_Call(self, node):  # noqa: N802
+        name = collective_name(node)
+        if name is not None:
+            axis = axis_argument(node, name)
+            if axis is not None and string_literals(axis):
+                self.findings.append(self.ctx.finding(
+                    "axis-name", node, self.qualname,
+                    f"hardcoded axis name {string_literals(axis)!r} in "
+                    f"lax.{name}; thread the axis from the strategy / "
+                    "shard_map seam (a parameter default is fine)",
+                ))
+        self.generic_visit(node)
+
+
+def check_axis_names(ctx) -> List[Finding]:
+    v = _Visitor(ctx)
+    v.visit(ctx.tree)
+    return v.findings

@@ -1,0 +1,135 @@
+"""Rule ``tracer-leak``: host-Python patterns that break under jit tracing.
+
+Scoped to the modules whose functions run inside ``jit``/``shard_map``
+(core, comm, dist, models, kernels, optim, and ``train/step.py``); launch,
+configs, serve drivers and the training loop run host-side by design.
+
+Flags, inside function bodies:
+
+- ``x.item()`` — host sync; always wrong in library/step code.
+- ``float(...)``/``int(...)``/``bool(...)`` over an expression that calls
+  into ``jnp.*`` / ``jax.lax.*`` / ``jax.random.*`` — concretizes a tracer.
+  (Static helpers like ``jnp.dtype`` are exempt.)
+- ``if``/``while``/``assert`` whose test calls into jnp/lax — Python
+  control flow on a traced value raises ``TracerBoolConversionError`` at
+  best and silently specializes at worst.
+- a curated set of ``np.*`` array ops (``np.asarray``, ``np.sum``, ...) —
+  host numpy over a tracer fails; static shape helpers (``np.ndim``,
+  ``np.prod`` over shapes) stay allowed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.findings import Finding
+
+from ._common import ScopedVisitor, attr_chain
+
+TRACED_SCOPES = (
+    "repro/core/", "repro/comm/", "repro/dist/", "repro/models/",
+    "repro/kernels/", "repro/optim/", "repro/train/step.py",
+)
+
+# jnp/jax attributes that are static (operate on dtypes/shapes, not values)
+_STATIC_ATTRS = frozenset(
+    {"dtype", "shape", "ndim", "size", "itemsize", "eval_shape",
+     "ShapeDtypeStruct", "tree", "tree_util"}
+)
+
+# np.<name> calls that consume array *values* (host-side math)
+_NP_VALUE_OPS = frozenset(
+    {"asarray", "array", "copy", "sum", "mean", "max", "min", "abs", "exp",
+     "log", "sqrt", "dot", "matmul", "where", "argmax", "argmin", "argsort",
+     "linalg", "concatenate", "stack", "einsum"}
+)
+
+
+def _is_traced_call(node: ast.AST) -> bool:
+    """Does ``node`` contain a call into jnp / jax.lax / jax.random?"""
+    for n in ast.walk(node):
+        if not isinstance(n, ast.Call):
+            continue
+        chain = attr_chain(n.func)
+        if len(chain) < 2:
+            continue
+        if chain[0] == "jnp" and chain[1] not in _STATIC_ATTRS:
+            return True
+        if chain[0] == "jax" and len(chain) >= 2 and chain[1] in (
+            "lax", "random", "numpy", "nn"
+        ):
+            return True
+        if chain[0] == "lax":
+            return True
+    return False
+
+
+class _Visitor(ScopedVisitor):
+    def __init__(self, ctx):
+        super().__init__()
+        self.ctx = ctx
+        self.findings: List[Finding] = []
+        self._depth = 0  # >0 inside a function body
+
+    def _scoped(self, node, label):
+        is_fn = isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda))
+        self._depth += is_fn
+        super()._scoped(node, label)
+        self._depth -= is_fn
+
+    def _flag(self, node, msg):
+        self.findings.append(
+            self.ctx.finding("tracer-leak", node, self.qualname, msg)
+        )
+
+    def visit_Call(self, node):  # noqa: N802
+        if self._depth:
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args):
+                self._flag(node, ".item() syncs to host; traced code must "
+                                 "stay device-side")
+            chain = attr_chain(node.func)
+            if (len(chain) == 1 and chain[0] in ("float", "int", "bool")
+                    and node.args and _is_traced_call(node.args[0])):
+                self._flag(node, f"{chain[0]}() over a jnp/lax expression "
+                                 "concretizes a tracer")
+            if (len(chain) >= 2 and chain[0] == "np"
+                    and chain[1] in _NP_VALUE_OPS):
+                self._flag(node, f"host numpy op np.{chain[1]} in traced "
+                                 "code; use jnp (np is only safe on static "
+                                 "shapes/dtypes)")
+        self.generic_visit(node)
+
+    def _check_test(self, node, kind):
+        if self._depth and _is_traced_call(node.test):
+            self._flag(node, f"Python {kind} on a jnp/lax value; use "
+                             "jnp.where / lax.cond instead of host control "
+                             "flow on tracers")
+
+    def visit_If(self, node):  # noqa: N802
+        self._check_test(node, "branch")
+        self.generic_visit(node)
+
+    def visit_While(self, node):  # noqa: N802
+        self._check_test(node, "loop")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node):  # noqa: N802
+        self._check_test(node, "assert")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node):  # noqa: N802
+        self._check_test(node, "conditional expression")
+        self.generic_visit(node)
+
+
+def check_tracer_leaks(ctx) -> List[Finding]:
+    if not any(
+        ctx.path.startswith(p) or ctx.path == p.rstrip("/")
+        for p in TRACED_SCOPES
+    ):
+        return []
+    v = _Visitor(ctx)
+    v.visit(ctx.tree)
+    return v.findings

@@ -22,7 +22,6 @@ import math
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import topk as topk_lib

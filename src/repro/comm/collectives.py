@@ -37,6 +37,29 @@ def dense_mean(tree: Tree, worker_axes: AxisNames) -> Tree:
     return jax.tree.map(lambda x: jax.lax.pmean(x, tuple(worker_axes)), tree)
 
 
+def pmean_tree(tree: Tree, axes: AxisNames) -> Tree:
+    """Mean-reduce every leaf of ``tree`` over ``axes`` (identity when empty).
+
+    The seam entry point for gradient/loss averaging over *reduce* axes
+    (e.g. the intra-pod mean in hierarchical SASG). Lives here — not at the
+    call site — so every d-sized reduction on the exchange path is owned by
+    ``repro.comm`` and visible to the HLO collective audit.
+    """
+    axes = tuple(axes)
+    if not axes:
+        return tree
+    return jax.tree.map(lambda x: jax.lax.pmean(x, axes), tree)
+
+
+def psum_scalar(x: jax.Array, axes: AxisNames) -> jax.Array:
+    """Sum a scalar statistic over ``axes`` (e.g. the |M^t| sender count).
+
+    Scalar-only by contract: callers outside ``repro.comm`` must not psum
+    array payloads directly (the dsize-collective lint rule enforces this).
+    """
+    return jax.lax.psum(x, tuple(axes))
+
+
 def _is_payload(x) -> bool:
     return isinstance(x, (SparsePayload, BlockPayload))
 

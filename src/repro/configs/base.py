@@ -6,10 +6,9 @@ shapes. ``reduced()`` derives the CPU-smoke-test variant of any config.
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
-from dataclasses import dataclass, field, replace
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass, replace
+from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)

@@ -48,7 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from . import topk as topk_lib
-from .types import Tree, ceil_div, tree_flatten_with_paths, tree_zeros_like
+from .types import Tree, tree_flatten_with_paths, tree_zeros_like
 
 _LEGACY_IMPLS = {"sharded": "reference", "block": "reference"}
 

@@ -16,7 +16,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 import jax
-import jax.numpy as jnp
 
 from .types import CommCounters, Tree, tree_size
 

@@ -32,14 +32,15 @@ beyond-paper composition e.g. with Adam, cf. CADA).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Any, Callable, NamedTuple, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-# submodule import (not the repro.comm package __init__) so that importing
+# submodule imports (not the repro.comm package __init__) so that importing
 # repro.comm first does not cycle through repro.core -> sasg -> repro.comm
+from repro.comm.collectives import pmean_tree, psum_scalar
 from repro.comm.transport import Transport, build_transport
 
 from .compressors import CompressorConfig, CompressorDef
@@ -47,9 +48,7 @@ from .selection import (
     SelectionConfig,
     SelectionState,
     advance_tau,
-    init_selection,
     push_window,
-    resolve_alphas,
     should_send,
 )
 from .types import Tree, tree_cast, tree_scale, tree_sq_norm, tree_where
@@ -190,9 +189,8 @@ def build_exchange(
         )
 
     def _reduce(tree: Tree) -> Tree:
-        if not reduce_axes:
-            return tree
-        return jax.tree.map(lambda x: jax.lax.pmean(x, reduce_axes), tree)
+        # d-sized reduction -> owned by the repro.comm seam (audited there)
+        return pmean_tree(tree, reduce_axes)
 
     def run(
         params: Tree,
@@ -214,7 +212,7 @@ def build_exchange(
         loss, g_fresh = grad_fn(params, batch)
         g_fresh = _reduce(transport.gather(g_fresh))
         if reduce_axes:
-            loss = jax.lax.pmean(loss, reduce_axes)
+            loss = pmean_tree(loss, reduce_axes)
 
         if sel.enabled:
             stale_p = jax.tree.map(
@@ -285,7 +283,7 @@ def build_exchange(
         )
         # send is identical within a reduce group (g_fresh was pmean'd over
         # reduce_axes), so summing over worker axes alone counts |M^t|.
-        num_sent = jax.lax.psum(send.astype(jnp.float32), worker_axes)
+        num_sent = psum_scalar(send.astype(jnp.float32), worker_axes)
         info = ExchangeInfo(
             loss=loss, send=send, num_sent=num_sent, rule_lhs=lhs, rule_rhs=rhs
         )

@@ -20,7 +20,6 @@ all-gather exchange shape-static (DESIGN.md §2).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ parameters, error buffers, ...).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax

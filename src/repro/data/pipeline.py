@@ -12,7 +12,6 @@ import threading
 from typing import Iterator, Optional
 
 import jax
-import numpy as np
 
 
 class ShardedLoader:

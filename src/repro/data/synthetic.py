@@ -7,7 +7,7 @@ sets shaped like MNIST/CIFAR for the paper-reproduction benchmarks.
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

@@ -18,7 +18,6 @@ head to its group (GQA-style n_groups sharing).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

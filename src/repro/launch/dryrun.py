@@ -26,12 +26,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, algo: str = "sasg",
              remat: str = "dots", k_ratio: float = 0.01, out_dir: str = None,
              extra_tag: str = "", ssm_chunk: int = 0) -> dict:
     import jax
-    import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs import SHAPES, cell_applicable, get_config
-    from repro.core import sasg_config, PRESETS
-    from repro.core.types import tree_bytes, tree_size
+    from repro.core import PRESETS
+    from repro.core.types import tree_bytes
     from repro.dist.strategy import choose_strategy
     from repro.launch import hlo_analysis as H
     from repro.launch.input_specs import (

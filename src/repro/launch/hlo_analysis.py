@@ -8,6 +8,7 @@ ring-algorithm wire factors per group size.
 """
 from __future__ import annotations
 
+import math
 import re
 from dataclasses import dataclass, field
 from typing import Dict
@@ -26,8 +27,12 @@ _COLL_RE = re.compile(
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
     r"(?:-start)?\(",
 )
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_LIST_ALL_RE = re.compile(r"replica_groups=\{(\{[\d,]+\}(?:,\{[\d,]+\})*)\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(\{\d+,\d+\}(?:,\{\d+,\d+\})*)\}")
 
 
 def _shape_bytes(s: str) -> int:
@@ -44,6 +49,50 @@ def _shape_bytes(s: str) -> int:
     return total
 
 
+def parse_replica_groups(line: str):
+    """Device-id groups of a collective line, or None when absent.
+
+    Handles both HLO spellings:
+    - explicit list:  ``replica_groups={{0,2},{1,3}}``
+    - iota form:      ``replica_groups=[2,2]<=[4]`` (optionally with a
+      transpose, ``[2,2]<=[2,2]T(1,0)``): iota over prod(dims), reshaped to
+      ``dims``, transposed by the permutation, flattened, then regrouped as
+      ``[num_groups, group_size]``.
+    """
+    m = _GROUPS_LIST_ALL_RE.search(line)
+    if m:
+        return [
+            [int(d) for d in grp.split(",")]
+            for grp in m.group(1)[1:-1].split("},{")
+        ]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = list(range(math.prod(dims)))
+        if m.group(4):
+            import numpy as _np
+
+            perm = [int(p) for p in m.group(4).split(",")]
+            ids = list(_np.arange(len(ids)).reshape(dims).transpose(perm).reshape(-1))
+        return [
+            [int(i) for i in ids[g * gsize:(g + 1) * gsize]]
+            for g in range(ngroups)
+        ]
+    return None
+
+
+def parse_source_target_pairs(line: str):
+    """collective-permute ``source_target_pairs`` as [(src, tgt), ...]."""
+    m = _PAIRS_RE.search(line)
+    if not m:
+        return None
+    return [
+        tuple(int(d) for d in pair.split(","))
+        for pair in m.group(1)[1:-1].split("},{")
+    ]
+
+
 def _group_size(line: str) -> int:
     m = _GROUPS_IOTA_RE.search(line)
     if m:
@@ -52,6 +101,26 @@ def _group_size(line: str) -> int:
     if m:
         return len(m.group(1).split(","))
     return 1
+
+
+def wire_factor(kind: str, group_size: int) -> float:
+    """Ring-algorithm per-device wire bytes as a multiple of the RESULT
+    bytes, per replica-group size g (one factor table shared by the flat
+    parser, the loop-aware analyzer, and the collective auditor)."""
+    g = max(group_size, 1)
+    if kind == "all-reduce":
+        # ring all-reduce: 2*(g-1)/g * payload per device
+        return 2.0 * (g - 1) / g
+    if kind == "all-gather":
+        # result holds g shards; each device receives (g-1)/g of result
+        return (g - 1) / g
+    if kind == "reduce-scatter":
+        # result is the local shard; sends (g-1) shard-sized messages
+        return float(g - 1)
+    if kind == "all-to-all":
+        return (g - 1) / g
+    # collective-permute: one send+recv of the payload
+    return 1.0
 
 
 @dataclass
@@ -87,19 +156,7 @@ def collect_collectives(hlo_text: str, top_n: int = 12) -> CollectiveStats:
         stats.top.append(
             (rb, kind, shapes[:80], nm.group(1) if nm else "")
         )
-        if kind == "all-reduce":
-            # ring all-reduce: 2*(g-1)/g * payload per device
-            wire = 2.0 * (g - 1) / g * rb
-        elif kind == "all-gather":
-            # result holds g shards; each device receives (g-1)/g of result
-            wire = (g - 1) / g * rb
-        elif kind == "reduce-scatter":
-            # result is the local shard; sends (g-1) shard-sized messages
-            wire = (g - 1) * rb
-        elif kind == "all-to-all":
-            wire = (g - 1) / g * rb
-        else:  # collective-permute: one send+recv of the payload
-            wire = rb
+        wire = wire_factor(kind, g) * rb
         stats.result_bytes[kind] = stats.result_bytes.get(kind, 0.0) + rb
         stats.wire_bytes[kind] = stats.wire_bytes.get(kind, 0.0) + wire
         stats.counts[kind] = stats.counts.get(kind, 0) + 1

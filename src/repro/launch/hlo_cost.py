@@ -15,7 +15,6 @@ with every instruction weighted by the product of enclosing trip counts.
 from __future__ import annotations
 
 import re
-from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 

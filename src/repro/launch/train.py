@@ -72,7 +72,6 @@ def main(argv=None):
     from repro.configs import get_config
     from repro.core import PRESETS
     from repro.data import (
-        ShardedLoader,
         classification_stream,
         synthetic_classification,
         token_stream,

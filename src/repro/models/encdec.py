@@ -7,7 +7,6 @@ KV caches and reuses precomputed cross-attention K/V from the encoder pass.
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Optional
 
 import jax

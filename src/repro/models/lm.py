@@ -10,8 +10,6 @@ lower with their exact depth.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Any, Optional
 
 import jax

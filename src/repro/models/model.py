@@ -10,7 +10,6 @@ Batch formats:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

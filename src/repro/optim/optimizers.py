@@ -8,7 +8,7 @@ Adam is the CADA-style variant.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Sequence
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

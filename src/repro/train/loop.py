@@ -10,12 +10,10 @@
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Iterator, Optional
+from dataclasses import dataclass
+from typing import Callable, Iterator, Optional
 
 import jax
-import numpy as np
 
 from . import checkpoint as CKPT
 from .step import BuiltStep, TrainState

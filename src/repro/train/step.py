@@ -15,7 +15,6 @@ cannot fit (DESIGN.md §6).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -1,0 +1,237 @@
+"""Per-rule positive/negative snippets for the repro.analysis lint pass,
+fingerprint/baseline semantics, and report determinism."""
+import json
+import textwrap
+
+from repro.analysis.findings import (
+    load_baseline,
+    split_by_baseline,
+    write_baseline,
+)
+from repro.analysis.lint import lint_source, report_rows, run_lint
+from repro.analysis.rules.registry import check_registry_consistency
+
+CORE = "repro/core/_snippet.py"      # inside every rule's scope
+
+
+def _lint(src, path=CORE, rule=None):
+    findings = lint_source(textwrap.dedent(src), path=path)
+    return [f for f in findings if rule is None or f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# axis-name
+# ---------------------------------------------------------------------------
+
+def test_axis_name_flags_string_literal():
+    fs = _lint("""
+        import jax
+        def f(x):
+            return jax.lax.psum(x, "data")
+    """, rule="axis-name")
+    assert len(fs) == 1 and "hardcoded axis name" in fs[0].message
+
+
+def test_axis_name_flags_kwarg_and_queries():
+    fs = _lint("""
+        import jax
+        def f(x):
+            a = jax.lax.all_gather(x, axis_name="stage", tiled=True)
+            i = jax.lax.axis_index("data")
+            return a, i
+    """, rule="axis-name")
+    assert len(fs) == 2
+
+
+def test_axis_name_allows_bound_axis_and_param_default():
+    fs = _lint("""
+        import jax
+        def f(x, axis="stage"):
+            return jax.lax.psum(x, axis) + jax.lax.axis_index(axis)
+    """, rule="axis-name")
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# tracer-leak
+# ---------------------------------------------------------------------------
+
+def test_tracer_leak_flags_item_float_branch_and_np():
+    fs = _lint("""
+        import jax, jax.numpy as jnp, numpy as np
+        def f(x):
+            a = x.item()
+            b = float(jnp.sum(x))
+            if jnp.any(x > 0):
+                x = x + 1
+            c = np.sum(x)
+            return a, b, c
+    """, rule="tracer-leak")
+    assert len(fs) == 4
+    msgs = " ".join(f.message for f in fs)
+    assert ".item()" in msgs and "concretizes" in msgs
+    assert "branch" in msgs and "np.sum" in msgs
+
+
+def test_tracer_leak_allows_static_shape_code():
+    fs = _lint("""
+        import jax.numpy as jnp, numpy as np
+        def f(x):
+            if x.ndim > 2:
+                x = x.reshape(-1)
+            n = int(np.prod(x.shape))
+            return jnp.zeros((n,), x.dtype)
+    """, rule="tracer-leak")
+    assert fs == []
+
+
+def test_tracer_leak_scoped_to_traced_modules():
+    src = """
+        import jax.numpy as jnp
+        def f(x):
+            return float(jnp.sum(x))
+    """
+    assert _lint(src, path="repro/core/x.py", rule="tracer-leak")
+    # launch / configs drivers run host-side by design
+    assert _lint(src, path="repro/launch/x.py", rule="tracer-leak") == []
+
+
+def test_tracer_leak_ignores_module_level_numpy():
+    fs = _lint("""
+        import numpy as np
+        TABLE = np.sum([[1, 2], [3, 4]], axis=0)
+    """, rule="tracer-leak")
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# dsize-collective
+# ---------------------------------------------------------------------------
+
+def test_dsize_flags_raw_collective_outside_seam():
+    fs = _lint("""
+        import jax
+        def f(g, axis):
+            return jax.lax.psum(g, axis)
+    """, rule="dsize-collective")
+    assert len(fs) == 1 and "Transport seam" in fs[0].message
+
+
+def test_dsize_allows_queries_literals_and_the_seam():
+    src = """
+        import jax
+        def f(x, axis):
+            s = jax.lax.psum(1, axis)
+            i = jax.lax.axis_index(axis)
+            return s, i
+    """
+    assert _lint(src, rule="dsize-collective") == []
+    # the seam itself is exempt: collectives are its job
+    dsized = """
+        import jax
+        def f(g, axis):
+            return jax.lax.pmean(g, axis)
+    """
+    assert _lint(dsized, path="repro/comm/x.py", rule="dsize-collective") == []
+    assert _lint(dsized, path="repro/core/x.py", rule="dsize-collective")
+
+
+def test_pragma_suppresses_single_site():
+    fs = _lint("""
+        import jax
+        def f(g, axis):
+            return jax.lax.psum(g, axis)  # repro-lint: ignore[dsize-collective]
+    """, rule="dsize-collective")
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# fingerprints + baseline
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_survives_line_moves():
+    src = """
+        import jax
+        def f(g, axis):
+            return jax.lax.psum(g, axis)
+    """
+    f1 = _lint(src, rule="dsize-collective")[0]
+    f2 = _lint("\n\n\n" + textwrap.dedent(src), rule="dsize-collective")[0]
+    assert f1.line != f2.line
+    assert f1.fingerprint == f2.fingerprint
+
+
+def test_identical_snippets_get_distinct_fingerprints():
+    fs = _lint("""
+        import jax
+        def f(g, axis):
+            a = jax.lax.psum(g, axis)
+            b = jax.lax.psum(g, axis)
+            return a, b
+    """, rule="dsize-collective")
+    assert len(fs) == 2
+    assert fs[0].fingerprint != fs[1].fingerprint
+    assert {f.occurrence for f in fs} == {0, 1}
+
+
+def test_baseline_roundtrip(tmp_path):
+    fs = _lint("""
+        import jax
+        def f(g, axis):
+            return jax.lax.psum(g, axis)
+    """, rule="dsize-collective")
+    path = str(tmp_path / "baseline.json")
+    write_baseline(fs, justifications={fs[0].fingerprint: "test reason"},
+                   path=path)
+    bl = load_baseline(path)
+    new, accepted = split_by_baseline(fs, bl)
+    assert new == [] and accepted == fs
+    assert bl.entries[fs[0].fingerprint]["justification"] == "test reason"
+    assert bl.stale([]) == [fs[0].fingerprint]
+
+
+def test_repo_sweep_is_clean_against_committed_baseline():
+    findings = run_lint()
+    bl = load_baseline()
+    new, _accepted = split_by_baseline(findings, bl)
+    assert new == [], "un-baselined lint findings:\n" + "\n".join(map(str, new))
+    assert bl.stale(findings) == []
+
+
+def test_injected_dsize_collective_is_not_baselined():
+    # the gate the ISSUE demands: a fresh d-sized collective anywhere in
+    # linted code must surface as a NEW finding against the committed baseline
+    fs = _lint("""
+        import jax
+        def rogue(update, axis):
+            return jax.lax.pmean(update, axis)
+    """, path="repro/train/_rogue.py", rule="dsize-collective")
+    assert len(fs) == 1
+    bl = load_baseline()
+    new, _ = split_by_baseline(fs, bl)
+    assert new == fs
+
+
+# ---------------------------------------------------------------------------
+# registry-consistency
+# ---------------------------------------------------------------------------
+
+def test_registry_default_is_consistent():
+    assert check_registry_consistency() == []
+
+
+def test_registry_detects_unaccounted_compressor():
+    fs = check_registry_consistency({"mystery_codec": object()})
+    assert fs and any("mystery_codec" in f.snippet for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_lint_report_is_deterministic():
+    a = run_lint()
+    b = run_lint()
+    ra = json.dumps({"findings": report_rows(a)}, indent=1, sort_keys=True)
+    rb = json.dumps({"findings": report_rows(b)}, indent=1, sort_keys=True)
+    assert ra == rb

@@ -1,0 +1,201 @@
+"""Canned-HLO fixtures for the text-level analyzers.
+
+Covers repro.launch.hlo_analysis (flat collective parser + replica-group /
+source-target parsing + ring wire factors) and repro.launch.hlo_cost (the
+while-loop-aware analyzer: trip-count recovery and weighted aggregation).
+"""
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+from repro.launch import hlo_cost as HC
+
+FLAT_HLO = """\
+HloModule canned
+
+ENTRY %main (p0: f32[1024]) -> f32[256] {
+  %p0 = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[4096]{0} all-gather(%p0), replica_groups=[1,4]<=[4], dimensions={0}
+  %cp = f32[1024]{0} collective-permute(%p0), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  ROOT %rs = f32[256]{0} reduce-scatter(%ar), replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add
+}
+"""
+
+
+def test_collect_collectives_counts_and_result_bytes():
+    stats = H.collect_collectives(FLAT_HLO)
+    assert stats.counts == {
+        "all-reduce": 1, "all-gather": 1, "collective-permute": 1,
+        "reduce-scatter": 1,
+    }
+    assert stats.result_bytes["all-reduce"] == 4096
+    assert stats.result_bytes["all-gather"] == 16384
+    assert stats.result_bytes["collective-permute"] == 1024 * 4
+    assert stats.result_bytes["reduce-scatter"] == 1024
+
+
+def test_collect_collectives_ring_wire_factors():
+    stats = H.collect_collectives(FLAT_HLO)
+    # g=4 groups: all-reduce 2(g-1)/g, all-gather (g-1)/g, reduce-scatter
+    # (g-1)x shard, permute 1x payload
+    assert stats.wire_bytes["all-reduce"] == pytest.approx(2 * 3 / 4 * 4096)
+    assert stats.wire_bytes["all-gather"] == pytest.approx(3 / 4 * 16384)
+    assert stats.wire_bytes["reduce-scatter"] == pytest.approx(3 * 1024)
+    assert stats.wire_bytes["collective-permute"] == pytest.approx(4096)
+    assert stats.total_wire == pytest.approx(sum(stats.wire_bytes.values()))
+
+
+def test_wire_factor_table():
+    assert H.wire_factor("all-reduce", 2) == pytest.approx(1.0)
+    assert H.wire_factor("all-gather", 2) == pytest.approx(0.5)
+    assert H.wire_factor("reduce-scatter", 4) == pytest.approx(3.0)
+    assert H.wire_factor("collective-permute", 2) == pytest.approx(1.0)
+    # degenerate single-device group moves nothing (permute excepted)
+    assert H.wire_factor("all-reduce", 1) == 0.0
+
+
+def test_parse_replica_groups_list_form():
+    line = "  %x = f32[8]{0} all-reduce(%y), replica_groups={{0,2},{1,3}}, to_apply=%add"
+    assert H.parse_replica_groups(line) == [[0, 2], [1, 3]]
+
+
+def test_parse_replica_groups_iota_forms():
+    assert H.parse_replica_groups("replica_groups=[2,2]<=[4]") == [[0, 1], [2, 3]]
+    # transpose form: iota(4).reshape(2,2).T -> groups {0,2},{1,3}
+    assert H.parse_replica_groups(
+        "replica_groups=[2,2]<=[2,2]T(1,0)"
+    ) == [[0, 2], [1, 3]]
+    assert H.parse_replica_groups("no groups here") is None
+
+
+def test_parse_source_target_pairs():
+    line = "collective-permute(%p), source_target_pairs={{0,1},{1,0},{2,3},{3,2}}"
+    assert H.parse_source_target_pairs(line) == [(0, 1), (1, 0), (2, 3), (3, 2)]
+    assert H.parse_source_target_pairs("all-reduce(%p)") is None
+
+
+# ---------------------------------------------------------------------------
+# mesh-axis attribution (repro.analysis.hlo_audit)
+# ---------------------------------------------------------------------------
+
+class _Dev:
+    def __init__(self, i):
+        self.id = i
+
+
+class _Mesh:
+    """Duck-typed mesh: logical device array + axis names."""
+
+    def __init__(self, shape, names):
+        n = int(np.prod(shape))
+        self.axis_names = tuple(names)
+        self.devices = np.array(
+            [_Dev(i) for i in range(n)], dtype=object
+        ).reshape(shape)
+
+
+def test_classify_axes_on_2x2_mesh():
+    from repro.analysis.hlo_audit import classify_axes
+
+    mesh = _Mesh((2, 2), ("data", "stage"))
+    # id = 2*data + stage
+    assert classify_axes(mesh, [[0, 2], [1, 3]]) == ("data",)
+    assert classify_axes(mesh, [[0, 1], [2, 3]]) == ("stage",)
+    assert classify_axes(mesh, [[0, 1, 2, 3]]) == ("data", "stage")
+    # default group (no replica_groups attribute) spans the whole mesh
+    assert classify_axes(mesh, None) == ("data", "stage")
+    # permute pairs along the stage axis
+    assert classify_axes(mesh, None, pairs=[(0, 1), (1, 0), (2, 3), (3, 2)]) \
+        == ("stage",)
+
+
+def test_parse_collective_ops_attributes_axes():
+    from repro.analysis.hlo_audit import parse_collective_ops
+
+    mesh = _Mesh((2, 2), ("data", "stage"))
+    hlo = """\
+ENTRY %main (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64]{0} parameter(0)
+  %a = f32[64]{0} all-reduce(%p0), replica_groups={{0,2},{1,3}}, to_apply=%add
+  ROOT %b = f32[64]{0} collective-permute(%a), source_target_pairs={{0,1},{1,0},{2,3},{3,2}}
+}
+"""
+    ops = parse_collective_ops(hlo, mesh)
+    assert [(o.kind, o.axes) for o in ops] == [
+        ("all-reduce", ("data",)),
+        ("collective-permute", ("stage",)),
+    ]
+    assert ops[0].wire_bytes == pytest.approx(256)   # 2*(1/2)*256
+    assert ops[1].wire_bytes == pytest.approx(256)
+
+
+# ---------------------------------------------------------------------------
+# hlo_cost: while-loop trip counts
+# ---------------------------------------------------------------------------
+
+LOOP_HLO = """\
+HloModule loop
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,128]{1,0} get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %d = f32[128,128]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,128]{1,0} all-reduce(%d), replica_groups={{0,1}}, to_apply=%add
+  ROOT %t = (s32[], f32[128,128]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[128,128])) -> pred[] {
+  %p = (s32[], f32[128,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(13)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[128,128]) -> (s32[], f32[128,128]) {
+  %x = f32[128,128]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %init = (s32[], f32[128,128]) tuple(%c0, %x)
+  ROOT %w = (s32[], f32[128,128]) while(%init), condition=%cond, body=%body
+}
+"""
+
+
+def test_hlo_cost_weights_loop_body_by_trip_count():
+    cost = HC.analyze(LOOP_HLO)
+    # dot: 2 * 128^3 flops per iteration, 13 iterations
+    assert cost.flops == pytest.approx(13 * 2 * 128 ** 3)
+    # all-reduce over g=2: wire = 2*(1/2)*64KiB per iteration
+    assert cost.coll_result["all-reduce"] == pytest.approx(13 * 128 * 128 * 4)
+    assert cost.coll_wire["all-reduce"] == pytest.approx(13 * 128 * 128 * 4)
+
+
+def test_hlo_cost_without_loop_counts_once():
+    cost = HC.analyze(FLAT_HLO)
+    assert cost.flops == 0.0
+    assert cost.coll_result["all-reduce"] == pytest.approx(4096)
+    assert cost.coll_wire["reduce-scatter"] == pytest.approx(3 * 1024)
+
+
+def test_hlo_cost_parse_computations_finds_entry():
+    comps = HC.parse_computations(LOOP_HLO)
+    assert {"add", "body", "cond", "main"} <= set(comps)
+    assert comps["__entry__"] is comps["main"]
+    opcodes = {i.opcode for i in comps["body"]}
+    assert {"dot", "all-reduce", "get-tuple-element"} <= opcodes
+
+
+def test_hlo_cost_shape_map_resolves_dot_operands():
+    comps = HC.parse_computations(LOOP_HLO)
+    shapes = HC.build_shape_map(comps)
+    assert shapes["x"] == (128, 128)
+    assert shapes["d"] == (128, 128)

@@ -1,6 +1,5 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs ref.py
 pure-jnp oracles."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

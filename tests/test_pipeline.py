@@ -15,7 +15,6 @@ from jax.sharding import PartitionSpec as P
 import repro.compat
 from repro.dist.pipeline import (
     build_pipelined_forward,
-    build_pipelined_loss,
     build_pipelined_vag,
     pipeline_apply,
     resolve_microbatches,

@@ -14,7 +14,6 @@ from repro.core.selection import (
     SelectionConfig,
     SelectionState,
     advance_tau,
-    init_selection,
     push_window,
     should_send,
 )

@@ -1,5 +1,4 @@
 """choose_strategy edge cases: 1-D meshes, SASG off, replication threshold."""
-import jax
 import pytest
 
 from repro import compat

@@ -7,7 +7,6 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.topk import (
-    BlockPayload,
     block_topk,
     blocked_topk,
     blocked_view_shape,

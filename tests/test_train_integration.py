@@ -1,11 +1,9 @@
 """End-to-end train-step integration: build_train_step on flat and
 hierarchical strategies, checkpoint/restore, fault recovery, elastic resize."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core import sasg_config, sgd_config, sparse_config
