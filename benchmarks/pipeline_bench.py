@@ -3,8 +3,11 @@
 Builds the smoke-sized cnn_cifar SASG step twice — flat workers, and
 workers x GPipe stages — on fake CPU devices, times jitted steps, and
 records step time plus both exchange traffic views (SASG upload bits and
-the pipeline ring bits from core.metrics.PipelineCommModel). Seeds the perf
-trajectory for the pipeline composition; run via
+the stage-axis traffic from core.metrics.PipelineCommModel, split into its
+activation-ring and gradient-gather components: the ring is GPipe's
+microbatch carries, the gather is the k-sized payload all-gather of the
+payload-level stage exchange). Seeds the perf trajectory for the pipeline
+composition; run via
 
   PYTHONPATH=src python -m benchmarks.run --stages 2
 """
@@ -82,10 +85,18 @@ def run(stages: int = 2, steps: int = 5, out_path: str = "BENCH_pipeline.json") 
             "bits_wire_per_upload": bp.bits_wire,
             "bits_paper_per_upload": bp.bits_paper,
             "pipe_bits_per_step": mets_p.get("pipe_bits_step", 0.0),
+            "pipe_ring_bits_per_step": mets_p.get("pipe_ring_bits_step", 0.0),
+            "pipe_gather_bits_per_step": mets_p.get(
+                "pipe_gather_bits_step", 0.0
+            ),
         },
         "note": "CPU fake-device timing: compares relative step cost only; "
                 "upload bits are identical by construction "
-                "(tests/test_pipeline_sasg.py), the pipeline adds ring bits.",
+                "(tests/test_pipeline_sasg.py). Stage-axis traffic splits "
+                "into the GPipe activation ring (pipe_ring_bits_per_step) "
+                "and the k-sized gradient payload gather "
+                "(pipe_gather_bits_per_step ~ one compressed upload, NOT "
+                "d-sized — the payload-level stage exchange).",
     }
     with open(out_path, "w") as f:
         json.dump(record, f, indent=1)

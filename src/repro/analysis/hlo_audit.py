@@ -16,12 +16,17 @@ HLO, attributes each one to the mesh axes its replica groups span, and then:
   fails the audit.
 - itemizes every *d-sized* collective that is NOT the accounted exchange:
   anything whose per-device result is at least ``min(0.5 x largest param
-  leaf, one compressed upload)`` bytes. On non-pipelined cells any such
-  collective fails the audit (the whole point of the paper is that nothing
-  d-sized crosses the wire); pipelined cells mark ``allow_dsized`` and the
-  inventory is recorded in the report + baseline instead (ROADMAP
-  carried-over limit: the GPipe ring and the stage gradient combine are
-  d-sized by construction and tracked here).
+  leaf, one compressed upload)`` bytes. Any such collective fails the audit
+  (the whole point of the paper is that nothing d-sized crosses the wire).
+  On pipelined cells the GPipe activation ring — the per-tick
+  collective-permute carries plus the psum that replicates the finished
+  microbatch outputs (its per-device result matches the ``prepare``
+  activation block, passed in as ``ring_result_bytes``) — is activation
+  traffic, not gradient traffic: it is itemized separately under
+  ``ring_collectives`` and exempt from the gate. Everything else on the
+  stage axis is GRADIENT traffic (``stage_grad_wire_bytes``) and, since the
+  payload-level stage gather landed, must be k-sized: a reintroduced
+  d-sized trunk gather/psum fails the gate like any other cell.
 
 Replica-group attribution: HLO spells groups either as an explicit list
 (``{{0,2},{1,3}}``) or iota form (``[2,2]<=[2,2]T(1,0)``), and
@@ -145,16 +150,18 @@ class AuditCell:
     mesh_axes: Tuple[str, ...] = ("data",)
     pipeline_stages: int = 1
     layout: Optional[str] = None          # compressor layout override
-    allow_dsized: bool = False            # pipelined cells: ring is d-sized
+    allow_dsized: bool = False            # escape hatch; no default cell uses it
 
 
 DEFAULT_CELLS: Tuple[AuditCell, ...] = (
     AuditCell(name="cnn_flat_sasg"),
     AuditCell(name="cnn_flat_sasg_pertensor", layout="per_tensor"),
+    # strict since the payload-level stage gather: only the activation ring
+    # (classified via ring_result_bytes) is d-sized on this cell
     AuditCell(
         name="cnn_pipe2_sasg",
         mesh_shape=(2, 2), mesh_axes=("data", "stage"),
-        pipeline_stages=2, allow_dsized=True,
+        pipeline_stages=2,
     ),
     AuditCell(name="cnn_flat_lasg_dense", algo="lasg"),
 )
@@ -225,8 +232,16 @@ def _expected_exchange(kind: str, M: int, bits_wire: float) -> Tuple[str, float]
 def audit_built(
     cell: AuditCell, mesh, strategy, built, hlo: str,
     tol: float = DEFAULT_TOL,
+    ring_result_bytes: Tuple[int, ...] = (),
 ) -> dict:
-    """Core audit of one compiled cell (split out so tests can inject)."""
+    """Core audit of one compiled cell (split out so tests can inject).
+
+    ``ring_result_bytes`` names the per-device result sizes of the GPipe
+    activation ring's all-reduces (the psum replicating finished microbatch
+    outputs, = the ``prepare`` activation block; computed by ``audit_cell``
+    from an eval_shape). Together with every stage-axis collective-permute
+    these are classified as activation-ring traffic — itemized, but exempt
+    from the d-sized gate (module docstring)."""
     import numpy as np
 
     ops = parse_collective_ops(hlo, mesh)
@@ -256,21 +271,28 @@ def audit_built(
     )
     threshold = min(0.5 * largest_leaf, built.bits_wire / 8.0)
 
+    stage_ax = strategy.stage_axis if strategy.pipelined else None
+
+    def is_ring(op: CollectiveOp) -> bool:
+        # GPipe activation ring: the per-tick microbatch carries (ppermute)
+        # and the output-replicating psum, whose per-device result is the
+        # prepare activation block — NOT gradient traffic
+        return (
+            stage_ax is not None
+            and stage_ax in op.axes
+            and (
+                op.kind == "collective-permute"
+                or (op.kind == "all-reduce"
+                    and op.result_bytes in ring_result_bytes)
+            )
+        )
+
     dsized = [
         op for op in ops
-        if op.result_bytes >= threshold and not is_exchange(op)
+        if op.result_bytes >= threshold
+        and not is_exchange(op) and not is_ring(op)
     ]
-    # dedupe identical instructions (HLO repeats per-leaf ops), keep a count
-    counted: Dict[tuple, int] = {}
-    for op in dsized:
-        key = _freeze_row(op)
-        counted[key] = counted.get(key, 0) + 1
-    dsized_rows = sorted(
-        (dict(k, count=n) for k, n in counted.items()),
-        key=lambda r: (-r["result_bytes"], r["kind"], r["shapes"]),
-    )
-    for r in dsized_rows:
-        r["axes"] = list(r["axes"])
+    dsized_rows = _count_rows(dsized)
 
     record = {
         "algo": cell.algo,
@@ -294,14 +316,16 @@ def audit_built(
     }
 
     if strategy.pipelined:
-        stage_ax = strategy.stage_axis
-        record["stage_axis_wire_bytes"] = round(
-            sum(op.wire_bytes for op in ops if stage_ax in op.axes), 1
-        )
-        record["ring_permute_wire_bytes"] = round(
-            sum(op.wire_bytes for op in ops
-                if op.kind == "collective-permute" and stage_ax in op.axes), 1
-        )
+        stage_wire = sum(op.wire_bytes for op in ops if stage_ax in op.axes)
+        ring_ops = [op for op in ops if is_ring(op)]
+        ring_wire = sum(op.wire_bytes for op in ring_ops)
+        record["stage_axis_wire_bytes"] = round(stage_wire, 1)
+        record["ring_collectives"] = _count_rows(ring_ops)
+        record["ring_wire_bytes"] = round(ring_wire, 1)
+        # stage-axis GRADIENT traffic = everything on the stage axis that is
+        # not the activation ring; since the payload-level gather this must
+        # be k-scale (the stage payload all-gather + tiny prepare psums)
+        record["stage_grad_wire_bytes"] = round(stage_wire - ring_wire, 1)
     return record
 
 
@@ -315,27 +339,43 @@ def _freeze_row(op: CollectiveOp) -> tuple:
     )
 
 
+def _count_rows(ops: Sequence[CollectiveOp]) -> List[dict]:
+    """Dedupe identical instructions (HLO repeats per-leaf ops) into counted
+    rows, largest result first."""
+    counted: Dict[tuple, int] = {}
+    for op in ops:
+        key = _freeze_row(op)
+        counted[key] = counted.get(key, 0) + 1
+    rows = sorted(
+        (dict(k, count=n) for k, n in counted.items()),
+        key=lambda r: (-r["result_bytes"], r["kind"], r["shapes"]),
+    )
+    for r in rows:
+        r["axes"] = list(r["axes"])
+    return rows
+
+
 def audit_cell(cell: AuditCell, tol: float = DEFAULT_TOL) -> dict:
     """Build, compile and audit one cell of the matrix."""
     model, mesh, strategy, built = _build_cell(cell)
     hlo = _compile_hlo(cell, mesh, built)
-    record = audit_built(cell, mesh, strategy, built, hlo, tol=tol)
+    rrb = _ring_result_bytes(cell, model, strategy) if strategy.pipelined else ()
+    record = audit_built(
+        cell, mesh, strategy, built, hlo, tol=tol, ring_result_bytes=rrb
+    )
 
     if strategy.pipelined:
-        # the analytic ring model the step publishes as pipe_bits_step
+        # the analytic models the step publishes as pipe_*_bits_step
         record["pipe_model_bytes_per_step"] = _pipe_model_bytes(
-            cell, model, strategy
+            cell, model, strategy, built
         )
     return record
 
 
-def _pipe_model_bytes(cell: AuditCell, model, strategy) -> int:
+def _prepare_activation(cell: AuditCell, model, strategy):
+    """eval_shape of ``pipeline.prepare`` on one worker's batch slice."""
     import jax
     import jax.numpy as jnp
-    import numpy as np
-
-    from repro.core import metrics as CM
-    from repro.dist.pipeline import resolve_microbatches
 
     M = strategy.num_workers
     wbatch = {
@@ -343,14 +383,39 @@ def _pipe_model_bytes(cell: AuditCell, model, strategy) -> int:
         "labels": jax.ShapeDtypeStruct((cell.batch // M,), jnp.int32),
     }
     pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    h = jax.eval_shape(model.pipeline.prepare, pshape, wbatch)
+    return jax.eval_shape(model.pipeline.prepare, pshape, wbatch)
+
+
+def _ring_result_bytes(cell: AuditCell, model, strategy) -> Tuple[int, ...]:
+    """Per-device result bytes of the ring's output-replicating psums: the
+    full prepare activation block (all microbatches stacked)."""
+    import numpy as np
+
+    h = _prepare_activation(cell, model, strategy)
+    return (int(np.prod(h.shape)) * h.dtype.itemsize,)
+
+
+def _pipe_model_bytes(cell: AuditCell, model, strategy, built) -> int:
+    import jax
+    import numpy as np
+
+    from repro.core import metrics as CM
+    from repro.dist.pipeline import resolve_microbatches
+    from repro.train.step import pipeline_gather_bits
+
+    h = _prepare_activation(cell, model, strategy)
     nm = resolve_microbatches(
         h.shape[0], strategy.microbatches or strategy.pipeline_stages
     )
+    pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     pipe = CM.PipelineCommModel(
         stages=strategy.pipeline_stages, n_micro=nm,
         act_elems=int(np.prod(h.shape)) // nm,
         bits_per_elem=h.dtype.itemsize * 8,
+        gather_bits=pipeline_gather_bits(
+            built.exchange.transport, pshape, model.pipeline, strategy,
+            built.exchange.config.selection,
+        ),
     )
     return int(pipe.bits_per_step() // 8)
 

@@ -14,9 +14,12 @@ Exempt:
   idiomatic static axis-size query);
 - ``repro/comm/`` itself and ``repro/compat.py`` (shim for the above).
 
-Known-accepted sites (the GPipe ring and the stage gradient combine in
-``dist/pipeline.py`` — ROADMAP carried-over limit, itemized by the HLO
-audit) are recorded in ``analysis/baseline.json`` with justifications.
+Known-accepted sites (the GPipe activation ring in ``dist/pipeline.py`` —
+activation traffic by construction, classified and itemized by the HLO
+audit's ``ring_collectives``) are recorded in ``analysis/baseline.json``
+with justifications. The stage GRADIENT exchange no longer appears here:
+it goes through the ``repro.comm`` Transport (the k-sized payload gather on
+the hot path, ``stage_combine_leaf`` on the dense fallback).
 """
 from __future__ import annotations
 

@@ -70,6 +70,19 @@ class BitsReport:
         ]
 
 
+def bucket_wire_bits(report: "BitsReport", prefixes) -> float:
+    """Wire bits of the buckets under the given "/"-joined path prefixes.
+
+    Used by the train step's pipeline accounting to size the stage-axis
+    payload gather: the trunk buckets' wire bits ARE the payload bytes the
+    k-sized stage all-gather moves (support-exact per_shard layout)."""
+
+    def match(b: BucketBits) -> bool:
+        return any(b.bucket == p or b.bucket.startswith(p + "/") for p in prefixes)
+
+    return float(sum(b.bits_wire for b in report.buckets if match(b)))
+
+
 def _leaves_with_paths(template: Tree):
     from repro.core.types import tree_flatten_with_paths
 

@@ -60,6 +60,58 @@ def psum_scalar(x: jax.Array, axes: AxisNames) -> jax.Array:
     return jax.lax.psum(x, tuple(axes))
 
 
+def psum_tree(tree: Tree, axes: AxisNames) -> Tree:
+    """Sum-reduce every leaf of ``tree`` over ``axes`` (identity when empty).
+
+    The seam entry point for the *small* stage-axis reductions of the
+    stage-local gradient path (dist.pipeline.build_stage_local_grads): only
+    the prepare-side leaves (stem/embedding) cross this psum — adding exact
+    zeros from the non-owning stages — so it is k-sized in spirit even
+    though the leaves are dense. Owned here so the HLO audit sees it.
+    """
+    axes = tuple(axes)
+    if not axes:
+        return tree
+    return jax.tree.map(lambda x: jax.lax.psum(x, axes), tree)
+
+
+def stage_combine_leaf(x: jax.Array, axis: str, is_trunk: bool) -> jax.Array:
+    """Dense stage-combine of one gradient leaf (the FALLBACK pipeline path).
+
+    Trunk leaves are stage-sliced on dim 0 -> tiled all-gather restores the
+    full stack; non-trunk grads exist only on the masked stage -> psum
+    broadcasts them. d-sized over the stage axis by construction; the
+    payload-level gather path (Transport.gather_payload) avoids this
+    entirely for supported compressors. Relocated from
+    ``dist.pipeline.build_stage_combine`` so every d-sized collective lives
+    in the ``repro.comm`` seam.
+    """
+    if is_trunk:
+        return jax.lax.all_gather(x, axis, axis=0, tiled=True)
+    return jax.lax.psum(x, axis)
+
+
+def gather_block_payload(p: BlockPayload, axis: str) -> BlockPayload:
+    """Stage-gather a BlockPayload compressed from a stage-LOCAL trunk slice.
+
+    Each stage owns a contiguous dim-0 slab of the stacked trunk leaf
+    (param_specs shards dim 0 over ``stage``), and the block-local view
+    never straddles the slab boundary (blocked_view_shape keeps dim 0 as a
+    batch dim), so a tiled dim-0 all-gather of the k-sized (values, indices)
+    payloads reconstructs EXACTLY the payload the flat run would have
+    produced — this is the k-sized wire op that replaces the d-sized trunk
+    all-gather. Indices are block-local and need no rebasing.
+    """
+    s = jax.lax.psum(1, axis)
+    vals = jax.lax.all_gather(p.values, axis, axis=0, tiled=True)
+    idxs = jax.lax.all_gather(p.indices, axis, axis=0, tiled=True)
+    return BlockPayload(
+        vals, idxs,
+        (p.blocked_shape[0] * s,) + tuple(p.blocked_shape[1:]),
+        (p.orig_shape[0] * s,) + tuple(p.orig_shape[1:]),
+    )
+
+
 def _is_payload(x) -> bool:
     return isinstance(x, (SparsePayload, BlockPayload))
 

@@ -21,31 +21,67 @@ error-feedback state. The transport owns:
   parallelism the in-region params have a stage-SLICED trunk, which is
   exactly why the old per-compressor densify paths could not compose with
   pipelining (the deleted ``train/step.py`` guard);
-- **stage composition**: the per-stage gradient combine (trunk all-gather +
-  stage-0-masked psum, built by ``dist.pipeline.build_stage_combine``) is
-  threaded in as ``grad_combine`` and applied by ``gather`` — the transport,
-  not ``build_pipelined_vag``, decides what the exchange sees;
+- **stage composition**: on the default hot path (block-local per_shard
+  topk_ef) the transport is handed a ``StageInfo`` and compresses the
+  stage-LOCAL trunk slice, then ``gather_payload`` all-gathers only the
+  k-sized (values, indices) payload over the stage axis — the d-sized trunk
+  gather never happens, and ``diff_sq_norm`` gives the selection rule a
+  stage-psum'd norm so all stages agree on send/skip. Compressors whose
+  support depends on cross-slice state fall back to the dense per-stage
+  gradient combine (``dist.pipeline.build_stage_combine``), threaded in as
+  ``grad_combine`` and applied by ``gather``;
 - **bit accounting**: per-bucket paper/wire bits, wire-dtype aware,
   reporting the per-layer k-ratio schedule (``bits_report``).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence
+from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import CompressorConfig, CompressorDef, build_compressor
+from repro.core.topk import BlockPayload
 from repro.core.types import (
     Tree,
     tree_cast,
     tree_flatten_concat,
+    tree_flatten_with_paths,
     tree_unflatten_concat,
     tree_zeros_like,
 )
 
 from . import bits as bits_lib
 from . import collectives
+
+
+class StageInfo(NamedTuple):
+    """Pipeline-stage context for the payload-level gather path.
+
+    ``trunk_prefixes`` are "/"-joined params-tree path prefixes of the
+    stage-sharded trunk leaves; ``trunk_dims`` maps each trunk leaf's full
+    path to its FULL (unsliced) leading-dim size so the compressor can pick
+    the as-if-full per-block k on the stage-local slice.
+    """
+
+    axis: str
+    num_stages: int
+    trunk_prefixes: tuple
+    trunk_dims: dict
+
+
+def supports_stage_payload(cfg: CompressorConfig) -> bool:
+    """True iff the compressor can encode a stage-local trunk slice whose
+    gathered payload is bit-identical to compressing the full leaf: the
+    block-local per_shard top-k is support-exact (blocks never straddle the
+    stage-slice boundary); every other layout/compressor sees cross-slice
+    state (global or per-leaf top-k support, per-leaf norms, full-leaf
+    randomness) and must use the dense stage-combine fallback."""
+    return cfg.name == "topk_ef" and cfg.resolved_layout() == "per_shard"
+
+
+def _is_trunk_path(path: str, prefixes) -> bool:
+    return any(path == p or path.startswith(p + "/") for p in prefixes)
 
 
 class Transport:
@@ -59,6 +95,7 @@ class Transport:
         leaf_specs=None,
         axis_sizes: Optional[dict] = None,
         grad_combine: Optional[Callable[[Tree], Tree]] = None,
+        stage: Optional[StageInfo] = None,
     ):
         self.cfg = cfg
         self.worker_axes = tuple(worker_axes)
@@ -66,8 +103,16 @@ class Transport:
         self.leaf_specs = leaf_specs
         self.axis_sizes = axis_sizes or {}
         self.grad_combine = grad_combine
+        self.stage = stage
+        if stage is not None and not supports_stage_payload(cfg):
+            raise ValueError(
+                f"compressor {cfg.name!r} (layout {cfg.resolved_layout()!r}) "
+                "cannot take the payload-level stage gather path; use the "
+                "dense grad_combine fallback instead"
+            )
         self.compressor: CompressorDef = build_compressor(
-            cfg, leaf_specs=leaf_specs, axis_sizes=axis_sizes
+            cfg, leaf_specs=leaf_specs, axis_sizes=axis_sizes,
+            stage_dims=stage.trunk_dims if stage is not None else None,
         )
         self.kind = self.compressor.kind      # "sparse" | "dense"
         # the REALIZED layout: compressors without a blocked impl (randk)
@@ -88,10 +133,60 @@ class Transport:
 
     def gather(self, g: Tree) -> Tree:
         """Combine per-stage gradient slices into the full tree the exchange
-        operates on (identity when no pipeline stage axis is threaded in)."""
+        operates on (identity when no pipeline stage axis is threaded in).
+
+        On the payload path (``stage`` set, ``grad_combine`` None) this stays
+        the identity: gradients remain stage-sliced and only the k-sized
+        payload crosses the stage axis (``gather_payload``)."""
         if self.grad_combine is None:
             return g
         return self.grad_combine(g)
+
+    def gather_payload(self, payload: Tree) -> Tree:
+        """All-gather the k-sized trunk payload slices over the stage axis.
+
+        The payload-level replacement for the d-sized trunk gather: trunk
+        BlockPayload leaves (compressed from the stage-local slice) are
+        dim-0 tiled-gathered into the full-stack payload; non-trunk payloads
+        were computed from replicated grads and are already bit-identical
+        across stages, so they pass through with zero collectives. Identity
+        when no stage is threaded in."""
+        if self.stage is None:
+            return payload
+        axis = self.stage.axis
+        prefixes = self.stage.trunk_prefixes
+        paths, leaves, treedef = tree_flatten_with_paths(
+            payload, is_leaf=collectives._is_payload
+        )
+        out = [
+            collectives.gather_block_payload(p, axis)
+            if isinstance(p, BlockPayload) and _is_trunk_path(path, prefixes)
+            else p
+            for path, p in zip(paths, leaves)
+        ]
+        return jax.tree.unflatten(treedef, out)
+
+    def diff_sq_norm(self, a: Tree, b: Tree) -> jax.Array:
+        """Stage-aware ||a - b||^2 for the SASG/LASG selection rule.
+
+        Trunk leaves are stage-local slices, so their squared-norm
+        contribution is psum'd over the stage axis (a scalar — O(1) wire);
+        non-trunk leaves are replicated and summed locally. All stages
+        compute the same value, so the send decision agrees bitwise."""
+        paths, la, _ = tree_flatten_with_paths(a)
+        lb = jax.tree.leaves(b)
+        trunk = jnp.zeros((), jnp.float32)
+        local = jnp.zeros((), jnp.float32)
+        for path, xa, xb in zip(paths, la, lb):
+            d = xa.astype(jnp.float32) - xb.astype(jnp.float32)
+            sq = jnp.sum(jnp.square(d))
+            if self.stage is not None and _is_trunk_path(path, self.stage.trunk_prefixes):
+                trunk = trunk + sq
+            else:
+                local = local + sq
+        if self.stage is not None:
+            trunk = collectives.psum_scalar(trunk, (self.stage.axis,))
+        return local + trunk
 
     # -- encode / exchange / densify ----------------------------------------
 
@@ -158,8 +253,10 @@ def build_transport(
     leaf_specs=None,
     axis_sizes: Optional[dict] = None,
     grad_combine: Optional[Callable[[Tree], Tree]] = None,
+    stage: Optional[StageInfo] = None,
 ) -> Transport:
     return Transport(
         cfg, worker_axes, num_workers,
         leaf_specs=leaf_specs, axis_sizes=axis_sizes, grad_combine=grad_combine,
+        stage=stage,
     )

@@ -236,10 +236,16 @@ def make_identity(cfg: CompressorConfig) -> CompressorDef:
 # top-k with error feedback (the paper's operator)
 # ---------------------------------------------------------------------------
 
-def make_topk_ef(cfg: CompressorConfig, leaf_specs=None, axis_sizes=None) -> CompressorDef:
+def make_topk_ef(cfg: CompressorConfig, leaf_specs=None, axis_sizes=None,
+                 stage_dims=None) -> CompressorDef:
     edtype = jnp.dtype(cfg.error_dtype)
     wdtype = jnp.dtype(cfg.wire_dtype)
     axis_sizes = axis_sizes or {}
+    # stage_dims: {"/"-joined leaf path -> FULL leading-dim size} for leaves
+    # that arrive stage-SLICED on dim 0 (payload-level stage gather). kb must
+    # be computed as-if-full so every stage selects the same per-block k as
+    # the flat run (k = ratio * full size can round differently on a slice).
+    stage_dims = stage_dims or {}
     layout = cfg.resolved_layout()
     impl = cfg.resolved_impl()
     if layout == "per_shard" and impl not in ("kernel", "reference"):
@@ -263,7 +269,9 @@ def make_topk_ef(cfg: CompressorConfig, leaf_specs=None, axis_sizes=None) -> Com
         docstring)."""
         ax, axsz = _sharded_axis_of(spec, x.shape, axis_sizes)
         blocked = topk_lib.blocked_view_shape(x.shape, ax, cfg.block_size, axsz)
-        kb = _blocked_kb(cfg, x.shape, blocked, path)
+        full0 = stage_dims.get(path)
+        eff_shape = (full0,) + x.shape[1:] if full0 else x.shape
+        kb = _blocked_kb(cfg, eff_shape, blocked, path)
         if impl == "kernel":
             from repro.kernels.topk_ef import ops as kops  # lazy: optional dep
 
@@ -448,9 +456,11 @@ _REGISTRY = {
 }
 
 
-def build_compressor(cfg: CompressorConfig, leaf_specs=None, axis_sizes=None) -> CompressorDef:
+def build_compressor(cfg: CompressorConfig, leaf_specs=None, axis_sizes=None,
+                     stage_dims=None) -> CompressorDef:
     if cfg.name not in _REGISTRY:
         raise ValueError(f"unknown compressor {cfg.name!r}; have {sorted(_REGISTRY)}")
     if cfg.name == "topk_ef":
-        return make_topk_ef(cfg, leaf_specs=leaf_specs, axis_sizes=axis_sizes)
+        return make_topk_ef(cfg, leaf_specs=leaf_specs, axis_sizes=axis_sizes,
+                            stage_dims=stage_dims)
     return _REGISTRY[cfg.name](cfg)

@@ -11,6 +11,16 @@ compression function — the classic Stich et al. (2018) / Karimireddy et al.
 Invariant (tested with hypothesis): compressed + residual == corrected input,
 exactly, for any deterministic C that returns a subset/projection of its
 input.
+
+Stage-sharded EF (pipeline parallelism, payload-gather hot path): the
+residual buffers of trunk leaves are sharded over the stage axis exactly
+like the params (``dist.sharding.ef_specs``) — each stage owns the
+residuals of its own trunk slice, d/S memory per device. The residual a
+stage holds depends only on the trunk COORDINATES it owns, never on the
+stage count, because the stage-local encode uses the same blocked geometry
+as the flat run (support-exactness, ``comm.transport``). Checkpoints store
+the FULL logical array, so restoring onto a different stage count is pure
+resharding: ``remap_error_state``.
 """
 from __future__ import annotations
 
@@ -52,3 +62,18 @@ def ef_apply(
     compressed = jax.tree.unflatten(treedef, [c for c, _ in pairs])
     new_state = EFState(error=jax.tree.unflatten(treedef, [e for _, e in pairs]))
     return compressed, new_state
+
+
+def remap_error_state(comp_state: Tree, shardings: Tree) -> Tree:
+    """Reshard a restored compressor/EF state onto a new stage topology.
+
+    Stage-sharded EF buffers checkpoint as FULL logical arrays (module
+    docstring), so an elastic restart — save under S stages, resume under
+    S' — never moves a residual to a different trunk coordinate: this is
+    ``device_put`` onto the target shardings (``dist.sharding.ef_specs`` of
+    the NEW mesh/strategy), bit-identical values, only the device placement
+    of each trunk row changes. Works for the dense-combine fallback too,
+    where the specs are stage-stripped and the "remap" is a plain
+    replicated placement.
+    """
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), comp_state, shardings)

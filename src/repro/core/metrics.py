@@ -66,14 +66,19 @@ class PipelineCommModel:
     Orthogonal to the SASG upload counters above: the GPipe ring moves one
     microbatch activation per stage per tick over ``n_micro + stages - 1``
     ticks (dist/pipeline.py), every step, regardless of the send/skip
-    decisions. Surfaced by the train step as ``pipe_bits_step`` /
-    ``pipe_bits_total`` metrics and by ``benchmarks/run.py --stages``.
+    decisions. ``gather_bits`` additionally accounts the stage-axis
+    GRADIENT-exchange traffic per step — the k-sized payload all-gather on
+    the payload-gather hot path (plus the tiny prepare-grad psum), or the
+    d-sized dense stage combine on the fallback path. Surfaced by the train
+    step as ``pipe_ring_bits_step`` / ``pipe_gather_bits_step`` (and their
+    sum ``pipe_bits_step``) and by ``benchmarks/run.py --stages``.
     """
 
     stages: int
     n_micro: int
     act_elems: int              # elements in ONE microbatch activation
     bits_per_elem: int = 32     # ring payload width (16 for bf16 compute)
+    gather_bits: float = 0.0    # stage-axis gradient-exchange bits per step
 
     @property
     def ticks(self) -> int:
@@ -83,8 +88,8 @@ class PipelineCommModel:
         """ppermute traffic one stage emits per training step."""
         return float(self.ticks) * self.act_elems * self.bits_per_elem
 
-    def bits_per_step(self) -> float:
-        """Total ring traffic per step: every stage's per-tick ppermute
+    def ring_bits_per_step(self) -> float:
+        """Activation-ring traffic per step: every stage's per-tick ppermute
         sends, plus the final psum that replicates the ``n_micro`` finished
         microbatch outputs to each stage (n_micro activation hops per
         stage)."""
@@ -92,6 +97,11 @@ class PipelineCommModel:
             self.bits_per_stage_per_step()
             + self.n_micro * self.act_elems * self.bits_per_elem
         )
+
+    def bits_per_step(self) -> float:
+        """Total stage-axis traffic per step: activation ring + gradient
+        exchange (payload gather or dense combine)."""
+        return self.ring_bits_per_step() + self.gather_bits
 
 
 @dataclass(frozen=True)

@@ -155,6 +155,7 @@ def build_exchange(
     leaf_specs=None,
     axis_sizes=None,
     grad_combine=None,
+    stage=None,
 ) -> SASGExchange:
     """Build the SASG exchange over a ``repro.comm`` Transport.
 
@@ -163,10 +164,22 @@ def build_exchange(
     transport applies it so the exchange always sees the FULL gradient tree,
     and densifies against that tree — never against the (possibly
     stage-sliced) params tree.
+
+    ``stage`` (optional, a ``comm.transport.StageInfo``, mutually exclusive
+    with ``grad_combine``) selects the payload-level gather path instead:
+    gradients stay stage-sliced, ``encode`` compresses the stage-LOCAL trunk
+    slice, and only the k-sized payload is gathered over the stage axis
+    (``Transport.gather_payload``); the selection rule runs on the
+    transport's stage-psum'd ``diff_sq_norm``.
     """
+    assert grad_combine is None or stage is None, (
+        "grad_combine (dense fallback) and stage (payload gather) are "
+        "mutually exclusive stage compositions"
+    )
     transport = build_transport(
         cfg.compressor, worker_axes, num_workers,
         leaf_specs=leaf_specs, axis_sizes=axis_sizes, grad_combine=grad_combine,
+        stage=stage,
     )
     compressor = transport.compressor
     sel = cfg.selection
@@ -240,10 +253,18 @@ def build_exchange(
                 a = sel.alpha_scale / jnp.maximum(lr, 1e-12)
                 a = jnp.broadcast_to(a, (sel.max_delay,)).astype(jnp.float32)
             sstate = SelectionState(tau=wstate.tau, window=gstate.window)
+            # payload-gather path: trunk grads are stage-local slices, so the
+            # rule's ||.||^2 must psum the trunk part over the stage axis
+            # (transport.diff_sq_norm) for all stages to agree on send/skip
+            dsn = transport.diff_sq_norm if transport.stage is not None else None
             send = should_send(
-                sel, g_rule_fresh, g_stale, sstate, a, num_workers, force_skip
+                sel, g_rule_fresh, g_stale, sstate, a, num_workers, force_skip,
+                diff_sq_norm=dsn,
             )
-            lhs = tree_sq_norm(jax.tree.map(jnp.subtract, g_rule_fresh, g_stale))
+            if dsn is not None:
+                lhs = dsn(g_rule_fresh, g_stale)
+            else:
+                lhs = tree_sq_norm(jax.tree.map(jnp.subtract, g_rule_fresh, g_stale))
             rhs = jnp.sum(a * gstate.window) / float(num_workers) ** 2
         else:
             send = jnp.ones((), bool)
@@ -260,6 +281,11 @@ def build_exchange(
         # tree (whose trunk is stage-sliced under pipelining).
         g = tree_scale(g_fresh, lr) if cfg.fold_lr else g_fresh
         payload_fresh, comp_state_cand = transport.encode(wstate.comp_state, g, key)
+        # payload-gather path: the k-sized trunk payload slices all-gather
+        # over the stage axis HERE (identity otherwise) — the stale cache
+        # then stores the full gathered payload, so skip-step replays are
+        # collective-free over stages just like in the flat run
+        payload_fresh = transport.gather_payload(payload_fresh)
 
         payload = tree_where(send, payload_fresh, wstate.stale_cache)
         comp_state_new = tree_where(send, comp_state_cand, wstate.comp_state)

@@ -74,9 +74,20 @@ def should_send(
     alphas: jax.Array,
     num_workers: int,
     force_skip: Optional[jax.Array] = None,
+    diff_sq_norm=None,
 ) -> jax.Array:
-    """Evaluate rule (6); returns a scalar bool (True => upload fresh grad)."""
-    lhs = tree_sq_norm(tree_sub(g_fresh, g_stale))
+    """Evaluate rule (6); returns a scalar bool (True => upload fresh grad).
+
+    ``diff_sq_norm(a, b)`` overrides the default local ||a - b||^2: under
+    payload-level stage sharding the trunk leaves are stage-local slices, so
+    the transport supplies a stage-aware norm (psum of the trunk
+    contribution over the stage axis) — every stage then evaluates the same
+    lhs and the send decision agrees across stages by construction.
+    """
+    if diff_sq_norm is not None:
+        lhs = diff_sq_norm(g_fresh, g_stale)
+    else:
+        lhs = tree_sq_norm(tree_sub(g_fresh, g_stale))
     rhs = jnp.sum(alphas * state.window) / float(num_workers) ** 2
     send = (lhs > rhs) | (state.tau >= cfg.max_delay)
     if force_skip is not None:

@@ -121,9 +121,9 @@ def path_str(path) -> str:
     return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
 
 
-def tree_flatten_with_paths(tree: Tree):
+def tree_flatten_with_paths(tree: Tree, is_leaf=None):
     """(paths, leaves, treedef) with paths rendered via ``path_str``."""
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
     return [path_str(p) for p, _ in flat], [x for _, x in flat], treedef
 
 

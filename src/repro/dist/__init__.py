@@ -8,19 +8,29 @@ transport seam"):
 - ``sharding``: role-aware PartitionSpec trees for params / batches / KV
   caches, consumed by the train step, the serve engine, and the dry-runs.
 - ``pipeline``: GPipe-style microbatch pipeline parallelism over a manual
-  stage axis. The train step runs the forward/backward through
-  ``build_pipelined_vag(combine=False)`` and threads the per-stage gradient
-  combine (``build_stage_combine``) into the ``repro.comm`` Transport, which
-  applies it so the exchange always sees the full gradient tree
-  (strategy -> sharding -> pipeline -> transport -> step).
+  stage axis. On the payload-gather hot path the train step runs
+  ``build_pipelined_vag(stage_local=True)`` — gradients stay stage-local
+  and the ``repro.comm`` Transport gathers only the k-sized compressed
+  payload over the stage axis; compressors whose support depends on
+  cross-slice state instead use ``build_pipelined_vag(combine=False)`` with
+  the dense per-stage combine (``build_stage_combine``) threaded into the
+  Transport (strategy -> sharding -> pipeline -> transport -> step).
 """
 from .strategy import Strategy, choose_strategy
-from .sharding import batch_specs, cache_specs, param_specs
+from .sharding import (
+    batch_specs,
+    cache_specs,
+    ef_specs,
+    param_specs,
+    stage_only_spec,
+    strip_stage_spec,
+)
 from .pipeline import (
     build_pipelined_forward,
     build_pipelined_loss,
     build_pipelined_vag,
     build_stage_combine,
+    build_stage_local_grads,
     pipeline_apply,
     resolve_microbatches,
 )
@@ -31,10 +41,14 @@ __all__ = [
     "param_specs",
     "batch_specs",
     "cache_specs",
+    "ef_specs",
+    "stage_only_spec",
+    "strip_stage_spec",
     "build_pipelined_forward",
     "build_pipelined_loss",
     "build_pipelined_vag",
     "build_stage_combine",
+    "build_stage_local_grads",
     "pipeline_apply",
     "resolve_microbatches",
 ]

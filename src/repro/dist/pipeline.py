@@ -31,6 +31,10 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+# submodule import (not the repro.comm package __init__) to avoid import
+# cycles; all stage-axis collectives below go through the repro.comm seam
+from repro.comm import collectives as comm_collectives
+
 
 def build_pipelined_forward(layer_fn: Callable, layers_per_stage: int,
                             axis: str = "stage") -> Callable:
@@ -106,20 +110,43 @@ def resolve_microbatches(batch_size: int, requested: int) -> int:
 
 
 def build_pipelined_loss(
-    pdef, axis: str = "stage", microbatches: int = 0
+    pdef, axis: str = "stage", microbatches: int = 0,
+    stage_local: bool = False,
 ) -> Callable:
     """Per-device loss for use inside a shard_map whose manual set contains
     ``axis``. ``params`` carries the LOCAL trunk slice (stage-sharded stacked
     layer dim); everything else is stage-replicated.
 
-    The returned scalar is masked to stage 0. That mask makes the gradient
-    stage-combine uniform (see ``build_pipelined_vag``): non-trunk params
-    contribute to the device loss only on stage 0 (prepare feeds microbatches
-    only through stage 0's ``first`` branch; finish is explicitly masked), so
-    a plain psum over the stage axis reconstructs their true gradient — and
-    the psum *transpose* inside ``pipeline_apply`` still broadcasts stage 0's
-    output cotangent to the last stage, so the reverse ring delivers each
-    stage its trunk slice's true gradient.
+    With ``stage_local=False`` (the dense-combine fallback) the returned
+    scalar is masked to stage 0. That mask makes the gradient stage-combine
+    uniform (see ``build_pipelined_vag``): non-trunk params contribute to the
+    device loss only on stage 0 (prepare feeds microbatches only through
+    stage 0's ``first`` branch; finish is explicitly masked), so a plain psum
+    over the stage axis reconstructs their true gradient — and the psum
+    *transpose* inside ``pipeline_apply`` still broadcasts stage 0's output
+    cotangent to the last stage, so the reverse ring delivers each stage its
+    trunk slice's true gradient.
+
+    With ``stage_local=True`` (the payload-gather hot path) the loss is the
+    TRUE unmasked loss, replicated over the stage axis, and the gradients
+    come out stage-LOCAL with no d-sized combine needed at all. The trick is
+    a stop-gradient mask on the pipeline output::
+
+        sg  = stop_gradient(out)
+        out = sg + where(stage == 0, out - sg, 0)
+
+    Values are untouched (``out`` is already stage-replicated by the ring's
+    final psum), so every stage computes the true loss and — because
+    ``finish`` reads no ``prepare_paths`` leaf — bit-identical, collective-
+    free finish-side gradients. The cotangent flowing back into the ring's
+    ``psum(out)``, however, is nonzero ONLY on stage 0, so the psum
+    transpose all-reduces ``(ct, 0, ..., 0)``: an exact broadcast of the one
+    true cotangent (adding zeros is fp-exact, no S-fold scaling for ANY
+    stage count), and the backward ring then delivers each stage its true
+    trunk-slice gradient, bitwise identical to the masked path. Prepare-side
+    gradients are true on stage 0 and exactly zero elsewhere (microbatches
+    enter only through stage 0's ``first`` branch); the tiny psum that
+    finishes them lives in ``build_stage_local_grads``.
     """
 
     def loss_fn(params, batch):
@@ -133,11 +160,50 @@ def build_pipelined_loss(
         layers_local = jax.tree.leaves(wseg)[0].shape[0]
         stage_fn = build_pipelined_forward(pdef.layer_fn, layers_local, axis)
         out = pipeline_apply(stage_fn, wseg, micro, axis)
+        if stage_local:
+            sg = jax.lax.stop_gradient(out)
+            out = sg + jnp.where(
+                jax.lax.axis_index(axis) == 0, out - sg, jnp.zeros_like(out)
+            )
         h = out.reshape((b,) + out.shape[2:])
         loss = pdef.finish(params, h, batch)
+        if stage_local:
+            return loss
         return jnp.where(jax.lax.axis_index(axis) == 0, loss, 0.0)
 
     return loss_fn
+
+
+def build_stage_local_grads(pdef, axis: str = "stage") -> Callable:
+    """Finalize the stage-local gradient tree of the ``stage_local`` loss.
+
+    Only the ``pdef.prepare_paths`` leaves need a collective: their grads
+    are true on stage 0 and exactly zero elsewhere, so a psum (through the
+    ``repro.comm`` seam) restores them everywhere by adding exact zeros —
+    for the paper nets this is a few KB (stem + first norm), not the d-sized
+    trunk. Finish-side grads are already bit-identical across stages (they
+    are computed from the stage-replicated activations and cotangents), and
+    trunk grads deliberately STAY stage-local: the transport compresses the
+    local slice and gathers only the k-sized payload.
+    """
+    from repro.dist.sharding import _path_keys
+
+    assert pdef.prepare_paths is not None, (
+        "stage-local gradients need PipelineDef.prepare_paths (a model whose "
+        "prepare/finish param reads are disjoint)"
+    )
+    prefixes = tuple(tuple(str(k) for k in p) for p in pdef.prepare_paths)
+
+    def fix(path, g):
+        keys = _path_keys(path)
+        if any(keys[: len(p)] == list(p) for p in prefixes):
+            return comm_collectives.psum_tree(g, (axis,))
+        return g
+
+    def gather(grads):
+        return jax.tree_util.tree_map_with_path(fix, grads)
+
+    return gather
 
 
 def build_stage_combine(pdef, axis: str = "stage") -> Callable:
@@ -155,11 +221,11 @@ def build_stage_combine(pdef, axis: str = "stage") -> Callable:
 
     def combine(path, x):
         keys = _path_keys(path)
-        if keys[: len(prefix)] == list(prefix):
-            # per-stage trunk slice -> full stacked trunk, replicated
-            return jax.lax.all_gather(x, axis, axis=0, tiled=True)
-        # stage-0-masked partial grad -> true grad (zero on stages != 0)
-        return jax.lax.psum(x, axis)
+        # trunk slice -> tiled all-gather (full stacked trunk, replicated);
+        # stage-0-masked partial grad -> psum to its true value. Both are
+        # d-sized over stages and owned by the repro.comm seam (audited).
+        is_trunk = keys[: len(prefix)] == list(prefix)
+        return comm_collectives.stage_combine_leaf(x, axis, is_trunk)
 
     def gather(grads):
         return jax.tree_util.tree_map_with_path(combine, grads)
@@ -168,7 +234,8 @@ def build_stage_combine(pdef, axis: str = "stage") -> Callable:
 
 
 def build_pipelined_vag(
-    pdef, axis: str = "stage", microbatches: int = 0, combine: bool = True
+    pdef, axis: str = "stage", microbatches: int = 0, combine: bool = True,
+    stage_local: bool = False,
 ) -> Callable:
     """Pipelined drop-in for ``jax.value_and_grad(model.loss_fn)`` inside the
     worker shard_map region. With ``combine=True`` (the standalone default)
@@ -177,14 +244,33 @@ def build_pipelined_vag(
     ``combine=False`` and threads ``build_stage_combine`` into the exchange
     instead: the ``repro.comm`` Transport owns the stage gather, so both the
     fresh and the stale-params auxiliary gradient (paper eq. 6/7 pairing)
-    are combined at the transport seam."""
+    are combined at the transport seam.
+
+    ``stage_local=True`` selects the payload-gather hot path: the loss is
+    the true replicated loss (no psum needed), trunk grads stay stage-local
+    for the transport's k-sized payload gather, and only the tiny
+    ``prepare_paths`` grads cross the stage axis
+    (``build_stage_local_grads``). Mutually exclusive with ``combine``."""
+    if stage_local:
+        assert not combine, "stage_local grads replace the dense combine"
+        loss_fn = build_pipelined_loss(pdef, axis, microbatches, stage_local=True)
+        vag = jax.value_and_grad(loss_fn)
+        finalize = build_stage_local_grads(pdef, axis)
+
+        def stage_local_vag(params, batch):
+            loss, g = vag(params, batch)
+            return loss, finalize(g)
+
+        return stage_local_vag
+
     loss_fn = build_pipelined_loss(pdef, axis, microbatches)
     vag = jax.value_and_grad(loss_fn)
     gather = build_stage_combine(pdef, axis) if combine else None
 
     def pipelined_vag(params, batch):
         loss, g = vag(params, batch)
-        loss = jax.lax.psum(loss, axis)
+        # scalar: the stage-0-masked loss psums to the true loss
+        loss = comm_collectives.psum_scalar(loss, (axis,))
         return loss, (gather(g) if gather is not None else g)
 
     return pipelined_vag

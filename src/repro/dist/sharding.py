@@ -124,6 +124,48 @@ def param_specs(params, mesh, fsdp_axis: Axis, tp_axis: Axis,
     return jax.tree_util.tree_map_with_path(leaf, params)
 
 
+def stage_only_spec(spec, stage_axis: Axis):
+    """Keep ONLY the manual stage axis of a param spec: the shard_map region
+    spec that hands each stage its contiguous trunk slice (all auto axes
+    dropped — they partition inside the region automatically)."""
+    from jax.sharding import PartitionSpec as P
+
+    return P(*[e if (stage_axis is not None and e == stage_axis) else None
+               for e in tuple(spec)])
+
+
+def strip_stage_spec(spec, stage_axis: Axis):
+    """A param spec with the manual stage axis stripped (auto axes only):
+    the layout of quantities that live in the FULL-gradient exchange domain
+    (stage-replicated EF buffers on the dense-combine fallback, exchange
+    leaf specs, the densified update)."""
+    from jax.sharding import PartitionSpec as P
+
+    return P(*[None if (stage_axis is not None and e == stage_axis) else e
+               for e in tuple(spec)])
+
+
+def ef_specs(pspecs, stage_axis: Axis, stage_sharded: bool):
+    """Sharding specs for the error-feedback (compressor-state) buffers.
+
+    The EF tree mirrors the params tree. On the payload-gather hot path
+    (``stage_sharded=True``) the trunk EF buffers are stage-SHARDED exactly
+    like the params — each stage owns the residuals of its own trunk slice,
+    d/S memory per device, and the checkpointed logical array keeps the
+    FULL shape so restore onto a different stage count is pure resharding
+    (core.error_feedback.remap_error_state). On the dense-combine fallback
+    the EF buffers live in the full-gradient domain and stay
+    stage-replicated (stage axis stripped)."""
+    from jax.sharding import PartitionSpec as P
+
+    if stage_sharded:
+        return pspecs
+    return jax.tree.map(
+        lambda s: strip_stage_spec(s, stage_axis), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
 def batch_specs(batch, mesh, data_axis: Axis):
     """Leading (batch) dim over the data axes; everything else replicated."""
 

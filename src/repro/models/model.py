@@ -43,6 +43,14 @@ class PipelineDef(NamedTuple):
     prepare: Callable[[Any, Any], jax.Array]           # (params, batch) -> h (B, ...)
     layer_fn: Callable[[Any, jax.Array], jax.Array]    # (layer_params, h) -> h
     finish: Callable[[Any, jax.Array, Any], jax.Array]  # (params, h, batch) -> loss
+    # Params-tree path prefixes read ONLY by ``prepare`` (disjoint from the
+    # leaves ``finish`` reads). When set, dist.pipeline can compute
+    # stage-LOCAL gradients (the payload-level stage gather path): finish
+    # grads replicate for free, prepare grads need one tiny psum over these
+    # leaves, and trunk grads stay stage-sliced. ``None`` means the split is
+    # not expressible (e.g. tied embeddings read by both sides) and the
+    # dense stage-combine fallback must be used.
+    prepare_paths: Optional[tuple] = None
 
 
 class Model(NamedTuple):
@@ -132,7 +140,11 @@ def _lm_pipeline(cfg: ModelConfig, remat: str) -> Optional[PipelineDef]:
             h = h[:, prefix.shape[1]:]
         return chunked_ce(h, _head_weight(params, cfg), batch["labels"])
 
-    return PipelineDef(n_units, ("unit", 0), prepare, layer_fn, finish)
+    return PipelineDef(
+        n_units, ("unit", 0), prepare, layer_fn, finish,
+        # tied embeddings are read by prepare AND finish — no disjoint split
+        prepare_paths=None if cfg.tie_embeddings else (("embed",),),
+    )
 
 
 def _build_lm(cfg: ModelConfig, remat: str) -> Model:
@@ -250,6 +262,7 @@ def _cnn_pipeline(cfg: ModelConfig) -> PipelineDef:
     return PipelineDef(
         PN.CNN_TRUNK_DEPTH, ("trunk",), prepare,
         lambda wl, h: PN.cnn_trunk_block(wl, h), finish,
+        prepare_paths=(("stem",), ("gn0",)),
     )
 
 

@@ -23,12 +23,15 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.comm import bits as bits_lib
+from repro.comm.transport import StageInfo, supports_stage_payload
 from repro.core import metrics as CM
 from repro.core.sasg import SASGConfig, build_exchange, update_global_state
 from repro.core.types import (
     CommCounters,
     add_worker_axis,
     strip_worker_axis,
+    tree_flatten_with_paths,
     tree_size,
     tree_sq_norm,
 )
@@ -37,7 +40,12 @@ from repro.dist.pipeline import (
     build_stage_combine,
     resolve_microbatches,
 )
-from repro.dist.sharding import param_specs
+from repro.dist.sharding import (
+    ef_specs,
+    param_specs,
+    stage_only_spec,
+    strip_stage_spec,
+)
 from repro.dist.strategy import Strategy
 from repro.models.model import Model
 from repro.optim import GradientTransformation, apply_updates
@@ -68,6 +76,52 @@ class BuiltStep(NamedTuple):
 # Knob: when True, worker-state shardings constrain only the worker dim and
 # XLA propagates auto-axis shardings (workaround lever for partitioner bugs).
 SIMPLE_WSTATE_SPECS = False
+
+
+def pipeline_gather_bits(transport, params_shape, pdef, strategy, selection) -> float:
+    """Static stage-axis GRADIENT-exchange wire bits per step per device.
+
+    Honest about which path the built transport takes: on the payload-gather
+    path it is one k-sized payload all-gather ((S-1)/S tiled) plus the tiny
+    prepare-grad psum per grad computation; on the dense fallback it is the
+    d-sized trunk all-gather + non-trunk psum per grad computation
+    (``dist.pipeline.build_stage_combine``). Consumed by the train-step
+    metrics (``pipe_gather_bits_step``) and the HLO audit's analytic pipe
+    model, so both stay in sync with ``CM.PipelineCommModel``.
+    """
+    S = strategy.pipeline_stages
+    # pipelined grad computations per step: fresh, plus the stale-params
+    # auxiliary grad when selection is on (two probe grads when probing)
+    n_combines = (
+        1 if not selection.enabled
+        else (3 if selection.probe_fraction < 1.0 else 2)
+    )
+    paths, leaves, _ = tree_flatten_with_paths(params_shape)
+    trunk_pfx = ("/".join(str(k) for k in pdef.trunk_path),)
+
+    def _under(pth, prefixes):
+        return any(pth == p or pth.startswith(p + "/") for p in prefixes)
+
+    def _dense_bits(prefixes, invert=False):
+        return float(sum(
+            leaf.size * jnp.dtype(leaf.dtype).itemsize * 8
+            for pth, leaf in zip(paths, leaves)
+            if _under(pth, prefixes) != invert
+        ))
+
+    if transport.stage is not None:
+        trunk_wire = bits_lib.bucket_wire_bits(
+            transport.bits_report(params_shape), trunk_pfx
+        )
+        prep_pfx = tuple("/".join(str(k) for k in p) for p in pdef.prepare_paths)
+        return (
+            (S - 1) / S * trunk_wire
+            + n_combines * 2 * (S - 1) / S * _dense_bits(prep_pfx)
+        )
+    return n_combines * (
+        (S - 1) / S * _dense_bits(trunk_pfx)
+        + 2 * (S - 1) / S * _dense_bits(trunk_pfx, invert=True)
+    )
 
 
 def _worker_index(worker_axes):
@@ -147,36 +201,69 @@ def build_train_step(
 
     def _stage_only(spec):
         """The manual-stage part of a param spec (trunk stacked dim)."""
-        return P(*[e if (stage is not None and e == stage) else None
-                   for e in tuple(spec)])
+        return stage_only_spec(spec, stage)
 
     def _no_stage(spec):
         """A param spec with the manual stage axis stripped (auto axes only)."""
-        return P(*[None if (stage is not None and e == stage) else e
-                   for e in tuple(spec)])
+        return strip_stage_spec(spec, stage)
+
+    # Payload-gather hot path: when the compressor supports stage-local
+    # encoding (block-local per_shard topk_ef) and the model's prepare/finish
+    # param reads are disjoint, the trunk gradient is NEVER stage-gathered —
+    # gradients stay stage-sliced, the transport compresses the local slice,
+    # and only the k-sized payload crosses the stage axis. Everything else
+    # (per_tensor/flat layouts, randk/qsgd/dense compressors, tied-embedding
+    # models) takes the dense stage-combine fallback.
+    payload_mode = (
+        stage is not None
+        and pdef.prepare_paths is not None
+        and supports_stage_payload(sasg_cfg.compressor)
+    )
+    stage_info = None
+    if payload_mode:
+        _prefixes = tuple("/".join(p) for p in (trunk_paths or ()))
+        _tpaths, _tleaves, _ = tree_flatten_with_paths(params_shape)
+        trunk_dims = {
+            pth: leaf.shape[0]
+            for pth, leaf in zip(_tpaths, _tleaves)
+            if any(pth == p or pth.startswith(p + "/") for p in _prefixes)
+        }
+        stage_info = StageInfo(
+            axis=stage, num_stages=strategy.pipeline_stages,
+            trunk_prefixes=_prefixes, trunk_dims=trunk_dims,
+        )
 
     vag = jax.value_and_grad(model.loss_fn)
     # Inside the worker region, pipelined strategies swap value_and_grad for
-    # the stage-pipelined version. The per-stage gradient combine (trunk
-    # all-gather + stage-0-masked psum) is NOT fused into the vag: it is
-    # threaded into the exchange as the transport's stage composition
-    # (repro.comm.Transport.gather), so the exchange always operates on —
-    # and densifies against — the FULL gradient tree, and every compressor
-    # layout composes with pipelining.
+    # the stage-pipelined version. On the fallback path the per-stage
+    # gradient combine (trunk all-gather + stage-0-masked psum) is NOT fused
+    # into the vag: it is threaded into the exchange as the transport's
+    # stage composition (repro.comm.Transport.gather), so the exchange
+    # always operates on — and densifies against — the FULL gradient tree.
+    # On the payload path the vag itself is stage-local (stop-gradient loss
+    # mask, dist.pipeline.build_pipelined_loss) and no dense combine exists.
     worker_vag = (
-        build_pipelined_vag(pdef, stage, strategy.microbatches, combine=False)
+        build_pipelined_vag(
+            pdef, stage, strategy.microbatches,
+            combine=False, stage_local=payload_mode,
+        )
         if stage is not None else vag
     )
-    stage_combine = build_stage_combine(pdef, stage) if stage is not None else None
+    stage_combine = (
+        build_stage_combine(pdef, stage)
+        if stage is not None and not payload_mode else None
+    )
 
     if strategy.uses_shard_map:
         # inner_dp stays an AUTO axis: the in-pod gradient mean over it is the
         # automatic backward psum of the batch sharding — no manual reduce.
         axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        # the exchange runs on the FULL gradient tree (pipelined strategies
-        # gather the trunk grad over stages first), so its leaf specs must
-        # not carry the manual stage axis — payload sizing and the sharded
-        # top-k layout would otherwise diverge from the non-pipelined run
+        # the exchange's leaf specs never carry the manual stage axis: on
+        # the fallback path the exchange sees the FULL gradient tree (trunk
+        # gathered over stages first), and on the payload path the
+        # stage-local slice must use the SAME TP-only blocked geometry as
+        # the flat run (support-exactness) — either way, a stage entry in
+        # the specs would diverge payload sizing from the non-pipelined run
         exchange = build_exchange(
             sasg_cfg,
             worker_axes=waxes,
@@ -187,12 +274,23 @@ def build_train_step(
             ),
             axis_sizes=axis_sizes,
             grad_combine=stage_combine,
+            stage=stage_info,
         )
         bits_paper = exchange.bits_per_upload_paper(params_shape)
         bits_wire = exchange.bits_per_upload_wire(params_shape)
     else:
         exchange = None
         bits_paper = bits_wire = 32.0 * tree_size(params_shape)
+
+    # Static stage-axis GRADIENT-exchange wire bits per step (per device),
+    # honest about which path is taken. Ring (activation) traffic is modeled
+    # separately inside the step (it depends on the batch shape).
+    gather_bits_step = 0.0
+    if stage is not None and strategy.uses_shard_map:
+        gather_bits_step = pipeline_gather_bits(
+            exchange.transport, params_shape, pdef, strategy,
+            sasg_cfg.selection,
+        )
 
     # ------------------------------------------------------------------
     # init + shardings
@@ -237,11 +335,15 @@ def build_train_step(
         """Worker dim over worker axes; stale_params additionally reuse param
         specs on their trailing dims (they ARE param-shaped, stage sharding
         included — they must mirror the params the pipelined forward slices).
-        comp_state (EF buffers) lives in the full-gradient exchange domain,
-        so it keeps the auto-axis specs but stays replicated over stages."""
+        comp_state (EF buffers): stage-SHARDED on the payload-gather path
+        (each stage owns its trunk slice's residuals, dist.sharding.ef_specs)
+        and stage-replicated auto-axis specs on the dense-combine fallback.
+        Either way the checkpointed logical array keeps the FULL trunk shape,
+        so restore across stage counts is pure resharding."""
         base = _worker_stacked(ws_shape, wa)
         if not strategy.uses_shard_map or SIMPLE_WSTATE_SPECS:
             return base
+        ef_pspecs = ef_specs(pspecs, stage, payload_mode)
         try:
             if jax.tree.structure(ws_shape.stale_params) == jax.tree.structure(params_shape):
                 stale = jax.tree.map(
@@ -250,8 +352,8 @@ def build_train_step(
                 base = base._replace(stale_params=stale)
             if jax.tree.structure(ws_shape.comp_state) == jax.tree.structure(params_shape):
                 err = jax.tree.map(
-                    lambda x, ps: P(wa, *tuple(_no_stage(ps))),
-                    ws_shape.comp_state, pspecs,
+                    lambda x, ps: P(wa, *tuple(ps)),
+                    ws_shape.comp_state, ef_pspecs,
                 )
                 base = base._replace(comp_state=err)
         except (AttributeError, ValueError):
@@ -334,7 +436,10 @@ def build_train_step(
         def _wstate_region_specs(ws):
             """shard_map specs for the worker state: worker dim over worker
             axes; stale_params additionally stage-sliced on the trunk so they
-            mirror the params tree the pipelined grad_fn consumes."""
+            mirror the params tree the pipelined grad_fn consumes. On the
+            payload-gather path the EF buffers (comp_state) are stage-sliced
+            the same way: encode sees the residuals of exactly the trunk
+            slice it compresses."""
             base = _worker_stacked(ws, wa)
             if stage is None:
                 return base
@@ -345,6 +450,15 @@ def build_train_step(
                         ws.stale_params, pspecs,
                     )
                     base = base._replace(stale_params=stale)
+                if payload_mode and (
+                    jax.tree.structure(ws.comp_state)
+                    == jax.tree.structure(params_shape)
+                ):
+                    err = jax.tree.map(
+                        lambda x, ps: P(wa, *tuple(_stage_only(ps))),
+                        ws.comp_state, pspecs,
+                    )
+                    base = base._replace(comp_state=err)
             except (AttributeError, ValueError):
                 pass
             return base
@@ -417,8 +531,11 @@ def build_train_step(
                     stages=strategy.pipeline_stages, n_micro=nm,
                     act_elems=int(np.prod(h.shape)) // nm,
                     bits_per_elem=h.dtype.itemsize * 8,
+                    gather_bits=gather_bits_step,
                 )
                 mets["pipe_stages"] = jnp.float32(strategy.pipeline_stages)
+                mets["pipe_ring_bits_step"] = jnp.float32(pipe.ring_bits_per_step())
+                mets["pipe_gather_bits_step"] = jnp.float32(pipe.gather_bits)
                 mets["pipe_bits_step"] = jnp.float32(pipe.bits_per_step())
                 mets["pipe_bits_total"] = (
                     jnp.float32(pipe.bits_per_step()) * gstate.step.astype(jnp.float32)

@@ -80,22 +80,76 @@ def test_injected_dsized_collective_fails_gate(monkeypatch):
     assert problems and "d-sized" in problems[0]
 
 
-def test_pipelined_cell_rings_are_itemized_not_fatal():
+@pytest.fixture(scope="module")
+def pipe_cell_record():
+    # the STRICT default matrix cell: allow_dsized is off since the
+    # payload-level stage gather landed
     cell = AuditCell(
         name="cnn_pipe2_sasg",
         mesh_shape=(2, 2), mesh_axes=("data", "stage"),
-        pipeline_stages=2, allow_dsized=True,
+        pipeline_stages=2,
+    )
+    return cell, audit_cell(cell)
+
+
+def test_pipelined_cell_is_clean_rings_itemized(pipe_cell_record):
+    """Post payload-gather: the ONLY d-sized stage-axis traffic is the GPipe
+    activation ring, classified out of the fatal list and itemized under
+    ring_collectives; the strict gate passes with zero forbidden ops."""
+    cell, rec = pipe_cell_record
+    assert rec["drift_ok"], rec
+    assert not rec["allow_dsized"]
+    assert rec["dsized_collectives"] == [] and rec["dsized_ok"]
+    # both ring op kinds present: per-tick ppermute carries + the
+    # output-replicating psum (result == the prepare activation block)
+    kinds = {r["kind"] for r in rec["ring_collectives"]}
+    assert kinds == {"collective-permute", "all-reduce"}
+    assert all("stage" in r["axes"] for r in rec["ring_collectives"])
+    assert rec["ring_wire_bytes"] > 0
+    assert rec["pipe_model_bytes_per_step"] > 0
+    assert check_report({"cells": {cell.name: rec}, "tolerance": 0.01}) == []
+
+
+def test_stage_gradient_traffic_is_k_sized(pipe_cell_record):
+    """The bit-conservation regression: stage-axis GRADIENT wire bytes
+    (everything on the stage axis minus the activation ring) must stay
+    under 2x one compressed upload — the payload gather is k-scale, where
+    the old dense stage combine moved ~15x the upload."""
+    cell, rec = pipe_cell_record
+    grad = rec["stage_grad_wire_bytes"]
+    assert grad == pytest.approx(
+        rec["stage_axis_wire_bytes"] - rec["ring_wire_bytes"]
+    )
+    assert 0 < grad <= 2 * rec["bits_wire"] / 8.0, rec
+
+
+def test_reintroduced_dsized_trunk_exchange_fails_gate(monkeypatch):
+    """Injection: smuggle a d-sized stage-axis collective back into the
+    gradient path (a dense psum of the update over the stage axis — the
+    moral equivalent of the old trunk gather). The ring classifier must NOT
+    absorb it, and the strict pipelined cell must fail check_report."""
+    from repro.comm.transport import Transport
+
+    orig = Transport.densify
+
+    def rogue(self, contrib, like):
+        out = orig(self, contrib, like)
+        if self.stage is not None:
+            s = self.stage
+            return jax.tree.map(
+                lambda x: jax.lax.psum(x, s.axis) / s.num_stages, out
+            )
+        return out
+
+    monkeypatch.setattr(Transport, "densify", rogue)
+    cell = AuditCell(
+        name="cnn_pipe2_sasg_rogue",
+        mesh_shape=(2, 2), mesh_axes=("data", "stage"),
+        pipeline_stages=2,
     )
     rec = audit_cell(cell)
-    assert rec["drift_ok"], rec
-    # the GPipe ring + stage gradient combine ARE d-sized — itemized,
-    # attributed to the stage axis, and allowed on this cell
-    assert rec["dsized_collectives"]
-    assert rec["dsized_ok"]
-    assert rec["ring_permute_wire_bytes"] > 0
-    assert rec["stage_axis_wire_bytes"] >= rec["ring_permute_wire_bytes"]
-    assert rec["pipe_model_bytes_per_step"] > 0
-    assert all(
-        "stage" in r["axes"] for r in rec["dsized_collectives"]
-    ), rec["dsized_collectives"]
-    assert check_report({"cells": {cell.name: rec}, "tolerance": 0.01}) == []
+    assert not rec["dsized_ok"]
+    assert rec["dsized_collectives"], "rogue stage psum not itemized"
+    assert all("stage" in r["axes"] for r in rec["dsized_collectives"])
+    problems = check_report({"cells": {cell.name: rec}, "tolerance": 0.01})
+    assert problems and "d-sized" in problems[0]

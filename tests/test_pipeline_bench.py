@@ -1,0 +1,35 @@
+"""Smoke test for benchmarks/pipeline_bench.py (BENCH_pipeline.json shape).
+
+One timed step per build keeps this a compile-bound smoke check; the point
+is the record schema — in particular the stage-axis traffic SPLIT
+(activation ring vs gradient payload gather) the PR-4/7 accounting work
+introduced — not the timings.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import pipeline_bench  # noqa: E402
+
+
+def test_pipeline_bench_splits_ring_and_gather(tmp_path):
+    out = tmp_path / "BENCH_pipeline.json"
+    rec = pipeline_bench.run(stages=2, steps=1, out_path=str(out))["pipeline"]
+    on_disk = json.loads(out.read_text())
+    assert on_disk == rec
+
+    pipe = rec["pipelined"]
+    # upload accounting identical flat vs pipelined (by construction)
+    assert pipe["bits_wire_per_upload"] == rec["flat"]["bits_wire_per_upload"]
+    # the stage-axis traffic decomposes exactly into ring + gather
+    assert pipe["pipe_bits_per_step"] == pytest.approx(
+        pipe["pipe_ring_bits_per_step"] + pipe["pipe_gather_bits_per_step"]
+    )
+    assert pipe["pipe_ring_bits_per_step"] > 0
+    # gradient-exchange traffic is k-scale on the payload path: less than
+    # one compressed upload per step (the old dense combine was ~15x it)
+    assert 0 < pipe["pipe_gather_bits_per_step"] < pipe["bits_wire_per_upload"]

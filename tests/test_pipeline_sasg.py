@@ -10,6 +10,10 @@ Equality tiers (see dist/pipeline.py):
   index at a near-tied magnitude boundary, after which error feedback keeps
   the runs slightly apart. Send/skip decisions and the (static-per-upload)
   bits counters still match exactly; params match to a tie-flip tolerance.
+
+The equality loop itself lives in the shared ``flat_pipe_check`` fixture
+(conftest.py) so the stage-sharded-EF suite runs the identical acceptance
+check.
 """
 import dataclasses
 
@@ -19,6 +23,7 @@ import numpy as np
 import pytest
 
 import repro.compat
+from conftest import max_param_diff
 from repro.configs import get_config
 from repro.core import (
     CompressorConfig,
@@ -57,72 +62,29 @@ def _cnn_batches(n, b=8, seed=0):
     } for _ in range(n)]
 
 
-def _pair(model, scfg, mesh_flat, mesh_pipe, stages, lr=0.05):
-    s_flat = choose_strategy(mesh_flat, sasg_enabled=True)
-    s_pipe = choose_strategy(
-        mesh_pipe, sasg_enabled=True, pipeline_stages=stages,
-        trunk_layers=model.pipeline.n_layers,
-    )
-    assert s_pipe.pipelined and s_pipe.pipeline_stages == stages
-    bf = build_train_step(model, scfg, mesh_flat, s_flat, constant(lr))
-    bp = build_train_step(model, scfg, mesh_pipe, s_pipe, constant(lr))
-    return bf, bp
-
-
-def _max_param_diff(sa, sb):
-    # host-side compare: the two states live on different (sub)meshes
-    return max(
-        float(np.max(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
-        for a, b in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sb.params))
-    )
-
-
-def test_pipelined_lasg_cnn_matches_flat_bitwise(mesh_flat1d, mesh_pipe2):
+def test_pipelined_lasg_cnn_matches_flat_bitwise(
+    mesh_flat1d, mesh_pipe2, flat_pipe_check
+):
     """Paper-mode LASG: 2-stage pipelined step == flat step (same update,
     same send/skip decisions, same counters) within fp32 reassociation."""
-    model = _cnn_model()
-    bf, bp = _pair(model, lasg_config(max_delay=4), mesh_flat1d, mesh_pipe2, 2)
-    assert bf.bits_wire == bp.bits_wire and bf.bits_paper == bp.bits_paper
-    sf, sp = bf.init(jax.random.PRNGKey(0)), bp.init(jax.random.PRNGKey(0))
-    assert _max_param_diff(sf, sp) == 0.0
-    for batch in _cnn_batches(4):
-        sf, mf = bf.jit_step(sf, batch)
-        sp, mp = bp.jit_step(sp, batch)
-        assert float(mf["num_sent"]) == float(mp["num_sent"])
-        np.testing.assert_allclose(float(mf["loss"]), float(mp["loss"]),
-                                   rtol=1e-5)
-        assert _max_param_diff(sf, sp) < 1e-6
-    assert float(sf.counters.rounds) == float(sp.counters.rounds)
-    np.testing.assert_allclose(float(sf.counters.bits_wire),
-                               float(sp.counters.bits_wire), rtol=1e-6)
+    flat_pipe_check(
+        _cnn_model(), lasg_config(max_delay=4), mesh_flat1d, mesh_pipe2, 2,
+        _cnn_batches(4), param_tol=1e-6, loss_rtol=1e-5,
+    )
 
 
-def test_pipelined_sasg_cnn_matches_flat(mesh_flat1d, mesh_pipe2):
+def test_pipelined_sasg_cnn_matches_flat(mesh_flat1d, mesh_pipe2,
+                                         flat_pipe_check):
     """Paper-mode SASG (top-k + EF + selection): decisions and bits match
     exactly; params to the top-k tie-flip tolerance (module docstring)."""
-    model = _cnn_model()
-    scfg = sasg_config(k_ratio=0.05, max_delay=4)
-    bf, bp = _pair(model, scfg, mesh_flat1d, mesh_pipe2, 2)
-    sf, sp = bf.init(jax.random.PRNGKey(0)), bp.init(jax.random.PRNGKey(0))
-    for i, batch in enumerate(_cnn_batches(4)):
-        sf, mf = bf.jit_step(sf, batch)
-        sp, mp = bp.jit_step(sp, batch)
-        assert float(mf["num_sent"]) == float(mp["num_sent"])
-        np.testing.assert_allclose(float(mf["loss"]), float(mp["loss"]),
-                                   rtol=1e-2)
-        assert _max_param_diff(sf, sp) < 2e-2
-        # pipelined runs additionally surface the stage-axis ring traffic
-        assert float(mp["pipe_bits_step"]) > 0
-        assert "pipe_bits_step" not in mf
-    assert float(sf.counters.rounds) == float(sp.counters.rounds)
-    np.testing.assert_allclose(float(sf.counters.bits_wire),
-                               float(sp.counters.bits_wire), rtol=1e-6)
-    np.testing.assert_allclose(float(sf.counters.bits_paper),
-                               float(sp.counters.bits_paper), rtol=1e-6)
+    flat_pipe_check(
+        _cnn_model(), sasg_config(k_ratio=0.05, max_delay=4),
+        mesh_flat1d, mesh_pipe2, 2, _cnn_batches(4),
+    )
 
 
 @pytest.mark.slow
-def test_pipelined_lm_4stage_skip_rounds():
+def test_pipelined_lm_4stage_skip_rounds(flat_pipe_check):
     """4-stage pipelined SASG on the reduced llama trunk: skip rounds reuse
     the cached stale payload under pipelining and stay bit-identical to the
     flat run (dense identity compressor -> no tie flips)."""
@@ -131,44 +93,35 @@ def test_pipelined_lm_4stage_skip_rounds():
     assert model.pipeline is not None and model.pipeline.n_layers == 4
     mesh_flat = repro.compat.make_mesh((2, 2), ("data", "model"))
     mesh_pipe = repro.compat.make_mesh((2, 4), ("data", "stage"))
-    bf, bp = _pair(model, lasg_config(max_delay=4), mesh_flat, mesh_pipe, 4)
-    sf, sp = bf.init(jax.random.PRNGKey(0)), bp.init(jax.random.PRNGKey(0))
     stream = token_stream(cfg.vocab_size, 8, 32, seed=0)
-    sents = []
-    for _ in range(3):
-        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
-        sf, mf = bf.jit_step(sf, batch)
-        sp, mp = bp.jit_step(sp, batch)
-        assert float(mf["num_sent"]) == float(mp["num_sent"])
-        sents.append(float(mp["num_sent"]))
-        assert _max_param_diff(sf, sp) < 1e-5
+    batches = [
+        {k: jnp.asarray(v) for k, v in next(stream).items()} for _ in range(3)
+    ]
+    res = flat_pipe_check(
+        model, lasg_config(max_delay=4), mesh_flat, mesh_pipe, 4, batches,
+        param_tol=1e-5, loss_rtol=1e-5,
+    )
     # first round always uploads; later rounds must include actual skips so
     # the stale-payload reuse path is exercised under pipelining
-    assert sents[0] == 2.0
-    assert min(sents[1:]) == 0.0
+    assert res["sents"][0] == 2.0
+    assert min(res["sents"][1:]) == 0.0
 
 
-def test_forced_skip_reuses_stale_payload_pipelined(mesh_flat1d, mesh_pipe2):
+def test_forced_skip_reuses_stale_payload_pipelined(mesh_flat1d, mesh_pipe2,
+                                                    flat_pipe_check):
     """Huge alphas force the skip branch after the mandatory first upload:
     every worker replays its cached payload, and the pipelined replay matches
     the flat one exactly (payloads are cached, not recomputed)."""
-    model = _cnn_model()
     scfg = sasg_config(k_ratio=0.05, max_delay=4)
     scfg = dataclasses.replace(
         scfg, selection=dataclasses.replace(scfg.selection, alphas=(1e12,) * 4)
     )
-    bf, bp = _pair(model, scfg, mesh_flat1d, mesh_pipe2, 2)
-    sf, sp = bf.init(jax.random.PRNGKey(0)), bp.init(jax.random.PRNGKey(0))
-    sents = []
-    for batch in _cnn_batches(3):
-        sf, mf = bf.jit_step(sf, batch)
-        sp, mp = bp.jit_step(sp, batch)
-        assert float(mf["num_sent"]) == float(mp["num_sent"])
-        sents.append(float(mp["num_sent"]))
-        assert _max_param_diff(sf, sp) < 2e-2
-    assert sents[0] == 2.0 and sents[1] == 0.0 and sents[2] == 0.0
+    res = flat_pipe_check(
+        _cnn_model(), scfg, mesh_flat1d, mesh_pipe2, 2, _cnn_batches(3),
+    )
+    assert res["sents"] == [2.0, 0.0, 0.0]
     # skip steps add zero algorithmic rounds in BOTH runs
-    assert float(sf.counters.rounds) == float(sp.counters.rounds) == 2.0
+    assert float(res["sf"].counters.rounds) == 2.0
 
 
 def test_stage_knob_fallbacks(mesh_flat1d, mesh_pipe2):
@@ -249,27 +202,20 @@ _COMPRESSORS = {
 
 
 @pytest.mark.parametrize("comp", sorted(_COMPRESSORS))
-def test_pipelined_compressors_match_flat(comp, mesh_flat1d, mesh_pipe2):
+def test_pipelined_compressors_match_flat(comp, mesh_flat1d, mesh_pipe2,
+                                          flat_pipe_check):
     """2-stage pipelined step == flat step for every compressor layout the
     old train/step.py guard used to reject (plus the per-shard defaults):
-    same sends, same bits counters, params to the tie-flip tolerance."""
+    same sends, same bits counters, params to the tie-flip tolerance. The
+    per-shard topk variants take the payload-gather hot path; everything
+    else takes the dense-combine fallback."""
     model = _cnn_model()
     scfg = SASGConfig(compressor=_COMPRESSORS[comp],
                       selection=SelectionConfig(enabled=False), name=comp)
-    bf, bp = _pair(model, scfg, mesh_flat1d, mesh_pipe2, 2)
-    assert bf.bits_wire == bp.bits_wire and bf.bits_paper == bp.bits_paper
-    sf, sp = bf.init(jax.random.PRNGKey(0)), bp.init(jax.random.PRNGKey(0))
-    assert _max_param_diff(sf, sp) == 0.0
-    for batch in _cnn_batches(3):
-        sf, mf = bf.jit_step(sf, batch)
-        sp, mp = bp.jit_step(sp, batch)
-        assert float(mf["num_sent"]) == float(mp["num_sent"])
-        np.testing.assert_allclose(float(mf["loss"]), float(mp["loss"]),
-                                   rtol=1e-2)
-        assert _max_param_diff(sf, sp) < 2e-2
-    assert float(sf.counters.rounds) == float(sp.counters.rounds)
-    np.testing.assert_allclose(float(sf.counters.bits_wire),
-                               float(sp.counters.bits_wire), rtol=1e-6)
+    res = flat_pipe_check(model, scfg, mesh_flat1d, mesh_pipe2, 2,
+                          _cnn_batches(3))
+    payload_path = comp in ("topk_kernel", "topk_reference")
+    assert (res["bp"].exchange.transport.stage is not None) == payload_path
 
 
 def test_kernel_and_reference_impls_agree_pipelined(mesh_pipe2):
@@ -295,5 +241,5 @@ def test_kernel_and_reference_impls_agree_pipelined(mesh_pipe2):
         sk, mk = built["kernel"].jit_step(sk, batch)
         sr, mr = built["reference"].jit_step(sr, batch)
         assert float(mk["num_sent"]) == float(mr["num_sent"])
-        assert _max_param_diff(sk, sr) < 1e-6
+        assert max_param_diff(sk, sr) < 1e-6
     assert built["kernel"].bits_wire == built["reference"].bits_wire
