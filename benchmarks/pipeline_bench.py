@@ -1,13 +1,15 @@
 """Pipelined-vs-flat SASG step benchmark (BENCH_pipeline.json).
 
-Builds the smoke-sized cnn_cifar SASG step twice — flat workers, and
-workers x GPipe stages — on fake CPU devices, times jitted steps, and
-records step time plus both exchange traffic views (SASG upload bits and
-the stage-axis traffic from core.metrics.PipelineCommModel, split into its
-activation-ring and gradient-gather components: the ring is GPipe's
-microbatch carries, the gather is the k-sized payload all-gather of the
-payload-level stage exchange). Seeds the perf trajectory for the pipeline
-composition; run via
+Builds the smoke-sized cnn_cifar SASG step three ways — flat workers,
+workers x stages under the legacy synchronous GPipe engine (dense f32
+activation ring), and workers x stages under the default 1F1B engine with
+the compressed ``ActivationLayout`` ring (blocked top-k values + u8 block
+indices) — on fake CPU devices, times jitted steps, and records step time
+plus both exchange traffic views (SASG upload bits and the stage-axis
+traffic from core.metrics.PipelineCommModel, split into its activation-ring
+and gradient-gather components). The ``pipelined`` record is the 1F1B
+default hot path; ``pipelined_gpipe`` keeps the dense-ring baseline the
+regression gate in ``repro.analysis --check`` measures against. Run via
 
   PYTHONPATH=src python -m benchmarks.run --stages 2
 """
@@ -24,6 +26,7 @@ def run(stages: int = 2, steps: int = 5, out_path: str = "BENCH_pipeline.json") 
     import numpy as np
 
     import repro.compat
+    from repro.comm.transport import ActivationLayout
     from repro.configs import get_config
     from repro.core import sasg_config
     from repro.dist.strategy import choose_strategy
@@ -34,6 +37,13 @@ def run(stages: int = 2, steps: int = 5, out_path: str = "BENCH_pipeline.json") 
     cfg = dataclasses.replace(get_config("cnn_cifar"), d_model=16)
     model = build(cfg)
     scfg = sasg_config(k_ratio=0.05, max_delay=4)
+    # the benched ring layout: pure blocked top-k at f32 values — the same
+    # cell the HLO audit proves byte-exact (cnn_pipe2_sasg_ringcomp); a bf16
+    # wire dtype would be silently upcast by XLA's CPU bf16 normalization,
+    # so the analytic counters here would overstate the saving
+    ring_layout = ActivationLayout(
+        wire_dtype="float32", k_ratio=0.05, block_size=256
+    )
 
     rng = np.random.default_rng(0)
     batch = {
@@ -41,8 +51,8 @@ def run(stages: int = 2, steps: int = 5, out_path: str = "BENCH_pipeline.json") 
         "labels": jnp.asarray(rng.integers(0, 10, size=(8,)).astype(np.int32)),
     }
 
-    def bench(mesh, strategy):
-        built = build_train_step(model, scfg, mesh, strategy, constant(0.05))
+    def bench(cfg_step, mesh, strategy):
+        built = build_train_step(model, cfg_step, mesh, strategy, constant(0.05))
         state = built.init(jax.random.PRNGKey(0))
         state, mets = built.jit_step(state, batch)      # warmup / compile
         jax.block_until_ready(state.params)
@@ -55,7 +65,7 @@ def run(stages: int = 2, steps: int = 5, out_path: str = "BENCH_pipeline.json") 
 
     mesh_flat = repro.compat.make_mesh((2,), ("data",))
     s_flat = choose_strategy(mesh_flat, sasg_enabled=True)
-    bf, mets_f, t_flat = bench(mesh_flat, s_flat)
+    bf, mets_f, t_flat = bench(scfg, mesh_flat, s_flat)
 
     mesh_pipe = repro.compat.make_mesh((2, stages), ("data", "stage"))
     s_pipe = choose_strategy(
@@ -67,7 +77,33 @@ def run(stages: int = 2, steps: int = 5, out_path: str = "BENCH_pipeline.json") 
             f"stages={stages} does not divide the cnn trunk depth "
             f"{model.pipeline.n_layers}"
         )
-    bp, mets_p, t_pipe = bench(mesh_pipe, s_pipe)
+    scfg_gpipe = dataclasses.replace(scfg, pipeline_engine="gpipe")
+    scfg_1f1b = dataclasses.replace(
+        scfg, pipeline_engine="1f1b", act_layout=ring_layout, overlap=True
+    )
+    bg, mets_g, t_gpipe = bench(scfg_gpipe, mesh_pipe, s_pipe)
+    bp, mets_p, t_pipe = bench(scfg_1f1b, mesh_pipe, s_pipe)
+
+    def pipe_record(built, mets, dt, cfg_step):
+        layout = cfg_step.act_layout or ActivationLayout()
+        return {
+            "mesh": {"data": 2, "stage": stages},
+            "engine": cfg_step.pipeline_engine,
+            "overlap": cfg_step.overlap,
+            "act_layout": {
+                "wire_dtype": layout.wire_dtype,
+                "k_ratio": layout.k_ratio,
+                "block_size": layout.block_size,
+            },
+            "step_time_s": dt,
+            "bits_wire_per_upload": built.bits_wire,
+            "bits_paper_per_upload": built.bits_paper,
+            "pipe_bits_per_step": mets.get("pipe_bits_step", 0.0),
+            "pipe_ring_bits_per_step": mets.get("pipe_ring_bits_step", 0.0),
+            "pipe_gather_bits_per_step": mets.get(
+                "pipe_gather_bits_step", 0.0
+            ),
+        }
 
     record = {
         "model": "cnn_cifar(d_model=16)",
@@ -79,27 +115,30 @@ def run(stages: int = 2, steps: int = 5, out_path: str = "BENCH_pipeline.json") 
             "bits_wire_per_upload": bf.bits_wire,
             "bits_paper_per_upload": bf.bits_paper,
         },
-        "pipelined": {
-            "mesh": {"data": 2, "stage": stages},
-            "step_time_s": t_pipe,
-            "bits_wire_per_upload": bp.bits_wire,
-            "bits_paper_per_upload": bp.bits_paper,
-            "pipe_bits_per_step": mets_p.get("pipe_bits_step", 0.0),
-            "pipe_ring_bits_per_step": mets_p.get("pipe_ring_bits_step", 0.0),
-            "pipe_gather_bits_per_step": mets_p.get(
-                "pipe_gather_bits_step", 0.0
-            ),
-        },
+        "pipelined": pipe_record(bp, mets_p, t_pipe, scfg_1f1b),
+        "pipelined_gpipe": pipe_record(bg, mets_g, t_gpipe, scfg_gpipe),
         "note": "CPU fake-device timing: compares relative step cost only; "
                 "upload bits are identical by construction "
                 "(tests/test_pipeline_sasg.py). Stage-axis traffic splits "
-                "into the GPipe activation ring (pipe_ring_bits_per_step) "
-                "and the k-sized gradient payload gather "
-                "(pipe_gather_bits_per_step ~ one compressed upload, NOT "
-                "d-sized — the payload-level stage exchange).",
+                "into the activation ring (pipe_ring_bits_per_step; dense "
+                "f32 under gpipe, blocked top-k wire parts under the 1f1b "
+                "default — byte-exact vs HLO per the "
+                "cnn_pipe2_sasg_ringcomp audit cell) and the k-sized "
+                "gradient payload gather (pipe_gather_bits_per_step ~ one "
+                "compressed upload, NOT d-sized). The analysis --check gate "
+                "fails if pipelined.pipe_ring_bits_per_step regresses above "
+                "the compressed ceiling in analysis/baseline.json. Timing "
+                "caveat: on a single shared host core wall-clock tracks "
+                "TOTAL compute, so 1F1B's bubble win is invisible while its "
+                "stage-replicated tail recompute (the price of replicating "
+                "loss/grads via the compressed output broadcast instead of "
+                "a d-sized stage psum) reads as step-time overhead vs "
+                "gpipe; on real parallel devices the schedule, not total "
+                "compute, sets the critical path.",
     }
     with open(out_path, "w") as f:
         json.dump(record, f, indent=1)
     print(f"[pipeline_bench] flat {t_flat*1e3:.1f} ms/step, "
-          f"{stages}-stage {t_pipe*1e3:.1f} ms/step -> {out_path}")
+          f"{stages}-stage gpipe {t_gpipe*1e3:.1f} ms/step, "
+          f"1f1b+ring-topk {t_pipe*1e3:.1f} ms/step -> {out_path}")
     return {"pipeline": record}

@@ -8,7 +8,10 @@ os.environ["XLA_FLAGS"] = (
 """CLI for the repro.analysis passes.
 
 CI lint lane (exit non-zero on any non-baselined lint finding, any exchange
-wire drift > 1%, or any unaccounted d-sized collective):
+wire drift > 1%, any unaccounted d-sized collective, any activation-ring
+wire diverging from the PipelineCommModel on a 1F1B cell, or a committed
+BENCH_pipeline.json whose ring bits exceed the compressed baseline
+ceiling):
 
   PYTHONPATH=src python -m repro.analysis --check
 
@@ -98,6 +101,30 @@ def main(argv=None) -> int:
             print(f"  FAIL {p}")
         if problems:
             failed = True
+
+        # fast-lane ring regression gate (BENCH_pipeline.json): the
+        # committed bench's compressed 1F1B activation ring must stay below
+        # the baseline ceiling — a schedule/layout change that fattens the
+        # ring fails --check even before the bench is re-run by hand
+        ceiling = load_baseline().pipeline_bench.get("max_ring_bits_per_step")
+        if ceiling is not None and os.path.exists("BENCH_pipeline.json"):
+            with open("BENCH_pipeline.json", encoding="utf-8") as fh:
+                bench = json.load(fh)
+            ring = bench.get("pipelined", {}).get("pipe_ring_bits_per_step")
+            if ring is None:
+                print("  FAIL BENCH_pipeline.json has no "
+                      "pipelined.pipe_ring_bits_per_step — regenerate via "
+                      "PYTHONPATH=src python -m benchmarks.run --stages 2")
+                failed = True
+            elif ring > ceiling:
+                print(f"  FAIL pipeline bench ring {ring:.0f} bits/step "
+                      f"exceeds the compressed baseline ceiling "
+                      f"{ceiling:.0f} (analysis/baseline.json "
+                      f"pipeline_bench.max_ring_bits_per_step)")
+                failed = True
+            else:
+                print(f"[bench] pipeline ring {ring:.0f} bits/step <= "
+                      f"ceiling {ceiling:.0f}")
 
     if args.write_baseline:
         audit_summary = None

@@ -67,6 +67,10 @@ class Baseline:
 
     entries: Dict[str, dict] = field(default_factory=dict)  # fingerprint -> row
     audit: dict = field(default_factory=dict)               # cell -> reference
+    # fast-lane bench ceilings, e.g. max_ring_bits_per_step: the committed
+    # BENCH_pipeline.json must keep the compressed 1F1B activation ring
+    # below this (repro.analysis --check fails otherwise)
+    pipeline_bench: dict = field(default_factory=dict)
 
     def accepts(self, f: Finding) -> bool:
         return f.fingerprint in self.entries
@@ -83,7 +87,11 @@ def load_baseline(path: Optional[str] = None) -> Baseline:
     with open(path) as f:
         raw = json.load(f)
     entries = {e["fingerprint"]: e for e in raw.get("findings", [])}
-    return Baseline(entries=entries, audit=raw.get("audit", {}))
+    return Baseline(
+        entries=entries,
+        audit=raw.get("audit", {}),
+        pipeline_bench=raw.get("pipeline_bench", {}),
+    )
 
 
 def write_baseline(
@@ -116,7 +124,11 @@ def write_baseline(
             "snippet": f.snippet,
             "justification": just,
         })
-    payload = {"findings": rows, "audit": audit if audit is not None else prev.audit}
+    payload = {
+        "findings": rows,
+        "audit": audit if audit is not None else prev.audit,
+        "pipeline_bench": prev.pipeline_bench,
+    }
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=1, sort_keys=True)
         fh.write("\n")

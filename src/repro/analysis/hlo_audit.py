@@ -18,13 +18,21 @@ HLO, attributes each one to the mesh axes its replica groups span, and then:
   anything whose per-device result is at least ``min(0.5 x largest param
   leaf, one compressed upload)`` bytes. Any such collective fails the audit
   (the whole point of the paper is that nothing d-sized crosses the wire).
-  On pipelined cells the GPipe activation ring — the per-tick
-  collective-permute carries plus the psum that replicates the finished
-  microbatch outputs (its per-device result matches the ``prepare``
-  activation block, passed in as ``ring_result_bytes``) — is activation
-  traffic, not gradient traffic: it is itemized separately under
-  ``ring_collectives`` and exempt from the gate. Everything else on the
-  stage axis is GRADIENT traffic (``stage_grad_wire_bytes``) and, since the
+  On pipelined cells the activation ring — the per-tick collective-permute
+  carries plus the all-reduce that replicates the finished microbatch
+  outputs — is activation traffic, not gradient traffic: permutes are
+  classified by op type (the stage axis moves nothing else point-to-point),
+  and the broadcast all-reduces by their per-device result matching the
+  ``ActivationLayout``-ENCODED output block's wire parts
+  (``ring_result_bytes`` — the dense wire-dtype cast, or the (values,
+  indices) part sizes of the blocked top-k; no dense-shape exemption). Ring
+  traffic is itemized under ``ring_collectives`` and RECLASSIFIED rather
+  than gated away: its total wire bytes must match the analytic
+  ``PipelineCommModel`` (``ring_drift`` <= ``RING_TOL``, scaled by the
+  number of pipeline passes the selection rule takes per step), so an
+  engine change that silently fattens the ring fails the audit even though
+  nothing is "d-sized gradient" traffic. Everything else on the stage axis
+  is GRADIENT traffic (``stage_grad_wire_bytes``) and, since the
   payload-level stage gather landed, must be k-sized: a reintroduced
   d-sized trunk gather/psum fails the gate like any other cell.
 
@@ -50,6 +58,10 @@ from repro.launch.hlo_analysis import (
 )
 
 DEFAULT_TOL = 0.01
+# activation-ring wire vs PipelineCommModel: measured drift on the seed
+# matrix is exactly 0 (the 1F1B model is byte-exact per device), so the
+# tolerance only absorbs wire_factor rounding
+RING_TOL = 0.01
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +162,9 @@ class AuditCell:
     mesh_axes: Tuple[str, ...] = ("data",)
     pipeline_stages: int = 1
     layout: Optional[str] = None          # compressor layout override
+    # activation-ring wire layout override: (wire_dtype, k_ratio, block_size)
+    # applied as SASGConfig.act_layout = ActivationLayout(*act_layout)
+    act_layout: Optional[Tuple[str, float, int]] = None
     allow_dsized: bool = False            # escape hatch; no default cell uses it
 
 
@@ -162,6 +177,21 @@ DEFAULT_CELLS: Tuple[AuditCell, ...] = (
         name="cnn_pipe2_sasg",
         mesh_shape=(2, 2), mesh_axes=("data", "stage"),
         pipeline_stages=2,
+    ),
+    # compressed activation ring: the broadcast all-reduces now carry the
+    # encoded (values, u8 indices) parts — NOT the dense block shape — so
+    # this cell proves reclassification follows the layout, and the ring
+    # gate proves the compressed model still matches the compiled bytes.
+    # Values stay f32: XLA's CPU bf16 normalization hoists the decode-side
+    # f32 convert ACROSS the ring collectives, so a bf16 wire dtype would
+    # compile to f32 on this backend and the byte-exact gate would
+    # (correctly) flag the 2x — cast-on-the-wire is audited only where the
+    # backend keeps bf16 collectives native.
+    AuditCell(
+        name="cnn_pipe2_sasg_ringcomp",
+        mesh_shape=(2, 2), mesh_axes=("data", "stage"),
+        pipeline_stages=2,
+        act_layout=("float32", 0.05, 256),
     ),
     AuditCell(name="cnn_flat_lasg_dense", algo="lasg"),
 )
@@ -193,6 +223,12 @@ def _build_cell(cell: AuditCell):
         scfg = dataclasses.replace(
             scfg,
             compressor=dataclasses.replace(scfg.compressor, layout=cell.layout),
+        )
+    if cell.act_layout is not None:
+        from repro.comm.transport import ActivationLayout
+
+        scfg = dataclasses.replace(
+            scfg, act_layout=ActivationLayout(*cell.act_layout)
         )
     strategy = choose_strategy(
         mesh, sasg_enabled=True,
@@ -236,12 +272,16 @@ def audit_built(
 ) -> dict:
     """Core audit of one compiled cell (split out so tests can inject).
 
-    ``ring_result_bytes`` names the per-device result sizes of the GPipe
-    activation ring's all-reduces (the psum replicating finished microbatch
-    outputs, = the ``prepare`` activation block; computed by ``audit_cell``
-    from an eval_shape). Together with every stage-axis collective-permute
-    these are classified as activation-ring traffic — itemized, but exempt
-    from the d-sized gate (module docstring)."""
+    ``ring_result_bytes`` names the per-device result sizes of the
+    activation ring's all-reduces: the wire parts of the
+    ``ActivationLayout``-encoded finished-output block (identity layout ->
+    the dense ``prepare`` block, = the old GPipe psum shape; compressed
+    layouts -> the values part + the index part; computed by ``audit_cell``
+    from an eval_shape of ``layout.encode``). Together with every
+    stage-axis collective-permute these are classified as activation-ring
+    traffic — itemized and cross-checked against the analytic ring model by
+    ``audit_cell``, not gated as d-sized gradient traffic (module
+    docstring)."""
     import numpy as np
 
     ops = parse_collective_ops(hlo, mesh)
@@ -274,9 +314,9 @@ def audit_built(
     stage_ax = strategy.stage_axis if strategy.pipelined else None
 
     def is_ring(op: CollectiveOp) -> bool:
-        # GPipe activation ring: the per-tick microbatch carries (ppermute)
-        # and the output-replicating psum, whose per-device result is the
-        # prepare activation block — NOT gradient traffic
+        # activation ring: the per-tick microbatch carries (ppermute) and
+        # the output-replicating psum, whose per-device result is one of
+        # the ENCODED output block's wire parts — NOT gradient traffic
         return (
             stage_ax is not None
             and stage_ax in op.axes
@@ -359,16 +399,37 @@ def audit_cell(cell: AuditCell, tol: float = DEFAULT_TOL) -> dict:
     """Build, compile and audit one cell of the matrix."""
     model, mesh, strategy, built = _build_cell(cell)
     hlo = _compile_hlo(cell, mesh, built)
-    rrb = _ring_result_bytes(cell, model, strategy) if strategy.pipelined else ()
+    rrb = (
+        _ring_result_bytes(cell, model, strategy, built)
+        if strategy.pipelined else ()
+    )
     record = audit_built(
         cell, mesh, strategy, built, hlo, tol=tol, ring_result_bytes=rrb
     )
 
     if strategy.pipelined:
-        # the analytic models the step publishes as pipe_*_bits_step
-        record["pipe_model_bytes_per_step"] = _pipe_model_bytes(
-            cell, model, strategy, built
-        )
+        # the analytic model the step publishes as pipe_*_bits_step
+        pipe = _pipe_model(cell, model, strategy, built)
+        record["pipe_model_bytes_per_step"] = int(pipe.bits_per_step() // 8)
+        if built.exchange.config.pipeline_engine == "1f1b":
+            # ring reclassification gate: the itemized ring wire bytes must
+            # MATCH the analytic model, not just be exempted. The compiled
+            # step walks the pipeline once per gradient pass — twice when
+            # the selection rule also probes the stale gradient (audit
+            # cells use probe_fraction=1, a full second pass) — and the
+            # model counts bits summed over stages while the HLO is
+            # per-device, hence the passes/stages scaling.
+            passes = 2 if built.exchange.config.selection.enabled else 1
+            expect = (
+                passes * pipe.ring_bits_per_step()
+                / 8.0 / strategy.pipeline_stages
+            )
+            ring = record.get("ring_wire_bytes", 0.0)
+            drift = abs(ring - expect) / expect if expect else 0.0
+            record["ring_passes"] = passes
+            record["ring_model_wire_bytes"] = round(expect, 1)
+            record["ring_drift"] = drift
+            record["ring_ok"] = drift <= RING_TOL
     return record
 
 
@@ -386,19 +447,36 @@ def _prepare_activation(cell: AuditCell, model, strategy):
     return jax.eval_shape(model.pipeline.prepare, pshape, wbatch)
 
 
-def _ring_result_bytes(cell: AuditCell, model, strategy) -> Tuple[int, ...]:
-    """Per-device result bytes of the ring's output-replicating psums: the
-    full prepare activation block (all microbatches stacked)."""
-    import numpy as np
-
-    h = _prepare_activation(cell, model, strategy)
-    return (int(np.prod(h.shape)) * h.dtype.itemsize,)
-
-
-def _pipe_model_bytes(cell: AuditCell, model, strategy, built) -> int:
+def _ring_result_bytes(
+    cell: AuditCell, model, strategy, built
+) -> Tuple[int, ...]:
+    """Per-device result bytes of the ring's output-replicating all-reduces:
+    the wire parts of the layout-ENCODED finished-output block (all
+    microbatches stacked). Identity layout -> one dense f32 part, byte-equal
+    to the old GPipe psum shape; compressed layouts -> the wire-dtype values
+    part + the block-local index part."""
     import jax
     import numpy as np
 
+    from repro.comm.transport import ActivationLayout
+
+    h = _prepare_activation(cell, model, strategy)
+    layout = built.exchange.config.act_layout or ActivationLayout()
+    parts = jax.eval_shape(
+        layout.encode, jax.ShapeDtypeStruct(h.shape, h.dtype)
+    )
+    return tuple(
+        int(np.prod(p.shape)) * np.dtype(p.dtype).itemsize for p in parts
+    )
+
+
+def _pipe_model(cell: AuditCell, model, strategy, built):
+    """The engine-aware ``PipelineCommModel`` for a built pipelined cell —
+    the same model the train step publishes as ``pipe_*_bits_step``."""
+    import jax
+    import numpy as np
+
+    from repro.comm.transport import ActivationLayout
     from repro.core import metrics as CM
     from repro.dist.pipeline import resolve_microbatches
     from repro.train.step import pipeline_gather_bits
@@ -407,17 +485,21 @@ def _pipe_model_bytes(cell: AuditCell, model, strategy, built) -> int:
     nm = resolve_microbatches(
         h.shape[0], strategy.microbatches or strategy.pipeline_stages
     )
+    act_elems = int(np.prod(h.shape)) // nm
+    layout = built.exchange.config.act_layout or ActivationLayout()
     pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    pipe = CM.PipelineCommModel(
+    return CM.PipelineCommModel(
         stages=strategy.pipeline_stages, n_micro=nm,
-        act_elems=int(np.prod(h.shape)) // nm,
+        act_elems=act_elems,
         bits_per_elem=h.dtype.itemsize * 8,
         gather_bits=pipeline_gather_bits(
             built.exchange.transport, pshape, model.pipeline, strategy,
             built.exchange.config.selection,
         ),
+        engine=built.exchange.config.pipeline_engine,
+        hop_payload_bits=layout.payload_bits(act_elems),
+        bcast_payload_bits=layout.payload_bits(nm * act_elems),
     )
-    return int(pipe.bits_per_step() // 8)
 
 
 def run_audit(
@@ -457,5 +539,14 @@ def check_report(report: dict) -> List[str]:
             problems.append(
                 f"{name}: d-sized collective(s) outside the accounted "
                 f"exchange on a cell that forbids them: {items}"
+            )
+        if not rec.get("ring_ok", True):
+            problems.append(
+                f"{name}: activation-ring wire {rec['ring_wire_bytes']:.0f} B "
+                f"diverges {100 * rec['ring_drift']:.2f}% from the "
+                f"PipelineCommModel "
+                f"({rec['ring_model_wire_bytes']:.0f} B over "
+                f"{rec['ring_passes']} pipeline pass(es)) — the ring is "
+                f"reclassified, not exempt; its bytes must stay accounted"
             )
     return problems

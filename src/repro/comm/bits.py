@@ -143,6 +143,28 @@ def _topk_buckets(cfg, template: Tree, leaf_specs, axis_sizes) -> List[BucketBit
     return out
 
 
+def activation_payload_bits(
+    wire_dtype: str, k_ratio: float, block_size: int, elems: int,
+) -> float:
+    """Static wire bits of ONE encoded activation block on the pipeline ring.
+
+    The single source of truth shared by ``transport.ActivationLayout``
+    (which emits exactly this payload), ``core.metrics.PipelineCommModel``
+    (which multiplies it by the 1F1B hop count) and the HLO audit's analytic
+    ring model. ``k_ratio <= 0`` is the dense cast: every element at
+    ``wire_dtype`` width. Otherwise the block top-k payload: ``ceil(elems /
+    block)`` blocks of ``kb = ceil(block * k_ratio)`` values each, values at
+    ``wire_dtype`` plus block-local indices (u8 for blocks <= 256, u16 up to
+    65536 — same compaction rule as the gradient payloads)."""
+    vb = dtype_bits(wire_dtype)
+    if k_ratio <= 0.0:
+        return float(vb * elems)
+    nb = ceil_div(elems, block_size)
+    kb = min(max(1, math.ceil(block_size * k_ratio)), block_size)
+    ib = 8 if block_size <= 256 else (16 if block_size <= 65536 else 32)
+    return float(nb * kb * (vb + ib))
+
+
 def account(
     cfg,
     template: Tree,

@@ -112,6 +112,34 @@ def gather_block_payload(p: BlockPayload, axis: str) -> BlockPayload:
     )
 
 
+def ring_shift_parts(parts: tuple, axis: str, perm) -> tuple:
+    """ppermute every wire part of an encoded activation one hop around the
+    stage ring (forward carries use the +1 ring, backward cotangent carries
+    the -1 ring). The parts are whatever ``transport.ActivationLayout.encode``
+    produced — the dense wire-dtype cast, or (values, indices) of the blocked
+    top-k — so this is the ONLY shape the 1F1B ring ever moves. Owned by the
+    ``repro.comm`` seam so the HLO audit attributes it as activation traffic
+    by op type, not by shape exemption.
+    """
+    return tuple(jax.lax.ppermute(p, axis, perm) for p in parts)
+
+
+def ring_broadcast_parts(parts: tuple, axis: str, mask) -> tuple:
+    """Replicate encoded activation parts held by exactly one stage.
+
+    ``mask`` is a traced bool, true only on the owning stage (the last stage
+    for the finished-output broadcast); everywhere else the parts are
+    zero-masked, so the psum is an exact broadcast of the owner's payload
+    (adding zeros, no scaling). With the identity layout this is bitwise the
+    GPipe ``psum(where(last, out, 0))``; with a compressed layout only the
+    k-sized parts cross the wire and every stage decodes the SAME values.
+    """
+    return tuple(
+        jax.lax.psum(jnp.where(mask, p, jnp.zeros_like(p)), axis)
+        for p in parts
+    )
+
+
 def _is_payload(x) -> bool:
     return isinstance(x, (SparsePayload, BlockPayload))
 

@@ -35,15 +35,18 @@ error-feedback state. The transport owns:
 """
 from __future__ import annotations
 
+import math
+from dataclasses import dataclass
 from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import CompressorConfig, CompressorDef, build_compressor
-from repro.core.topk import BlockPayload
+from repro.core.topk import BlockPayload, _scatter_last
 from repro.core.types import (
     Tree,
+    ceil_div,
     tree_cast,
     tree_flatten_concat,
     tree_flatten_with_paths,
@@ -53,6 +56,91 @@ from repro.core.types import (
 
 from . import bits as bits_lib
 from . import collectives
+
+
+@dataclass(frozen=True)
+class ActivationLayout:
+    """Wire layout for stage-boundary activations on the pipeline ring.
+
+    The gradient exchange owns its payload layout via the compressor configs;
+    this is the analogous knob for the 1F1B activation ring (forward carries,
+    backward cotangent carries, and the finished-output broadcast). Owned by
+    the transport layer so ``encode``/``decode`` and the bit accounting
+    (``payload_bits`` == ``bits.activation_payload_bits``) cannot drift apart.
+
+    - default (fp32, ``k_ratio=0``): identity — ``encode`` returns the array
+      unchanged and the ring is bit-identical to the uncompressed schedule.
+    - ``wire_dtype="bfloat16"``: cast-on-the-wire; decode casts back to the
+      compute dtype.
+    - ``k_ratio > 0``: blocked top-k over the flattened activation (blocks of
+      ``block_size``, ``kb = ceil(block_size * k_ratio)`` kept per block),
+      values at ``wire_dtype`` + block-local u8/u16 indices — the same
+      payload shape family as the gradient compressors, so the bit counters
+      share one formula. Lossy: backward runs against the decoded forward
+      activations, so the 1F1B engine still computes a consistent (exact
+      gradient of the compressed forward) update.
+    """
+
+    wire_dtype: str = "float32"
+    k_ratio: float = 0.0
+    block_size: int = 256
+
+    @property
+    def is_identity(self) -> bool:
+        return self.k_ratio <= 0.0 and jnp.dtype(self.wire_dtype) == jnp.float32
+
+    def _kb(self) -> int:
+        return min(max(1, math.ceil(self.block_size * self.k_ratio)),
+                   self.block_size)
+
+    def _index_dtype(self):
+        if self.block_size <= 256:
+            return jnp.uint8
+        if self.block_size <= 65536:
+            return jnp.uint16
+        return jnp.int32
+
+    def payload_bits(self, elems: int) -> float:
+        """Wire bits of one encoded activation of ``elems`` elements."""
+        return bits_lib.activation_payload_bits(
+            self.wire_dtype, self.k_ratio, self.block_size, elems
+        )
+
+    def encode(self, x: jax.Array) -> tuple:
+        """Activation -> tuple of wire arrays (the ring moves these parts)."""
+        if self.k_ratio <= 0.0:
+            return (x.astype(self.wire_dtype),)
+        flat = x.reshape(-1)
+        nb = ceil_div(flat.size, self.block_size)
+        pad = nb * self.block_size - flat.size
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        blocks = flat.reshape(nb, self.block_size)
+        # encode runs on device-LOCAL blocks inside the pipeline's manual
+        # shard_map region, so lax.top_k's sort-partitioner caveat (the
+        # reason topk.blocked_topk unrolls masked argmax) doesn't apply —
+        # and one sort pass is far cheaper than kb argmax sweeps. Ties
+        # resolve identically (descending |x|, first index wins).
+        _, idx = jax.lax.top_k(jnp.abs(blocks), self._kb())
+        vals = jnp.take_along_axis(blocks, idx, axis=-1)
+        return (
+            vals.astype(self.wire_dtype),
+            idx.astype(self._index_dtype()),
+        )
+
+    def decode(self, parts: tuple, shape: tuple,
+               dtype=jnp.float32) -> jax.Array:
+        """Wire parts -> dense activation of ``shape`` (static)."""
+        if self.k_ratio <= 0.0:
+            return parts[0].astype(dtype)
+        vals, idxs = parts
+        dense = _scatter_last(
+            vals.astype(jnp.float32), idxs.astype(jnp.int32), self.block_size
+        )
+        n = 1
+        for d in shape:
+            n *= d
+        return dense.reshape(-1)[:n].reshape(shape).astype(dtype)
 
 
 class StageInfo(NamedTuple):
@@ -96,6 +184,7 @@ class Transport:
         axis_sizes: Optional[dict] = None,
         grad_combine: Optional[Callable[[Tree], Tree]] = None,
         stage: Optional[StageInfo] = None,
+        act_layout: Optional[ActivationLayout] = None,
     ):
         self.cfg = cfg
         self.worker_axes = tuple(worker_axes)
@@ -104,6 +193,7 @@ class Transport:
         self.axis_sizes = axis_sizes or {}
         self.grad_combine = grad_combine
         self.stage = stage
+        self.act_layout = act_layout or ActivationLayout()
         if stage is not None and not supports_stage_payload(cfg):
             raise ValueError(
                 f"compressor {cfg.name!r} (layout {cfg.resolved_layout()!r}) "
@@ -216,6 +306,74 @@ class Transport:
             payload, self.kind, self.worker_axes, self.num_workers
         )
 
+    def exchange_overlapped(
+        self, fresh: Tree, stale: Tree, cand_state: Tree, old_state: Tree,
+        send, like: Tree,
+    ) -> tuple:
+        """Per-bucket select -> dispatch with a double-buffered EF commit.
+
+        The synchronous path selects the WHOLE payload tree (fresh vs the
+        stale cache), commits the EF state, then hands one monolithic tree to
+        the worker collective — every bucket's collective therefore depends
+        on every bucket's select in the emitted dataflow. Here each payload
+        bucket is selected and dispatched to its worker collective
+        independently, so XLA's latency-hiding scheduler may launch a
+        bucket's all-gather as soon as ITS gradient leaf (and the scalar send
+        bit) is ready, overlapping the remaining buckets' backward compute.
+        The EF state is double-buffered: the candidate buffer from ``encode``
+        is held alongside the old one until all bucket dispatches are
+        emitted, then committed with the same send bit — the commit is moved
+        AFTER the collectives in the dataflow, but selects between the same
+        two buffers, so the committed state (and the update) is bit-identical
+        to the synchronous path (tests/test_overlap_exchange.py).
+
+        ``send=None`` means selection is statically off (always-send): the
+        per-bucket where-gates vanish entirely and each bucket's collective
+        depends only on its own gradient leaf. The flat layout has a single
+        global bucket, so per-bucket == whole-tree there.
+
+        Dense-kind payloads (qsgd / signsgd / terngrad / identity) keep the
+        monolithic dispatch: their exchange is a summing psum, and splitting
+        it per bucket lets XLA's all-reduce combiner regroup the reductions
+        into a different elementwise summation order (ulp-level drift vs the
+        sync path). Sparse kinds are all-gathers — order-free — so only they
+        gain (and stay bit-exact under) per-bucket dispatch.
+
+        Returns ``(update, payload_committed, comp_state_committed)``.
+        """
+        from repro.core.types import tree_where
+
+        monolithic = self.layout == "flat" or self.kind == "dense"
+        if send is None:
+            sel_payload, new_state = fresh, cand_state
+        elif monolithic:
+            sel_payload = tree_where(send, fresh, stale)
+            new_state = tree_where(send, cand_state, old_state)
+        else:
+            fpaths, fleaves, ftdef = tree_flatten_with_paths(
+                fresh, is_leaf=collectives._is_payload
+            )
+            _, sleaves, _ = tree_flatten_with_paths(
+                stale, is_leaf=collectives._is_payload
+            )
+            sel_payload = jax.tree.unflatten(ftdef, [
+                tree_where(send, pf, ps) for pf, ps in zip(fleaves, sleaves)
+            ])
+            new_state = tree_where(send, cand_state, old_state)
+        if monolithic or send is None:
+            contrib = self.exchange(sel_payload)
+        else:
+            spaths, sleaves2, stdef = tree_flatten_with_paths(
+                sel_payload, is_leaf=collectives._is_payload
+            )
+            contrib = jax.tree.unflatten(stdef, [
+                collectives.exchange(
+                    p, self.kind, self.worker_axes, self.num_workers
+                )
+                for p in sleaves2
+            ])
+        return self.densify(contrib, like), sel_payload, new_state
+
     def densify(self, contrib: Tree, like: Tree) -> Tree:
         """Reshape the exchanged mean contribution against ``like`` — the
         full gradient tree (NOT the possibly stage-sliced params tree).
@@ -254,9 +412,10 @@ def build_transport(
     axis_sizes: Optional[dict] = None,
     grad_combine: Optional[Callable[[Tree], Tree]] = None,
     stage: Optional[StageInfo] = None,
+    act_layout: Optional["ActivationLayout"] = None,
 ) -> Transport:
     return Transport(
         cfg, worker_axes, num_workers,
         leaf_specs=leaf_specs, axis_sizes=axis_sizes, grad_combine=grad_combine,
-        stage=stage,
+        stage=stage, act_layout=act_layout,
     )

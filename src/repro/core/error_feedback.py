@@ -64,7 +64,7 @@ def ef_apply(
     return compressed, new_state
 
 
-def remap_error_state(comp_state: Tree, shardings: Tree) -> Tree:
+def remap_error_state(comp_state: Tree, shardings: Tree, mesh=None) -> Tree:
     """Reshard a restored compressor/EF state onto a new stage topology.
 
     Stage-sharded EF buffers checkpoint as FULL logical arrays (module
@@ -75,5 +75,42 @@ def remap_error_state(comp_state: Tree, shardings: Tree) -> Tree:
     of each trunk row changes. Works for the dense-combine fallback too,
     where the specs are stage-stripped and the "remap" is a plain
     replicated placement.
+
+    ``shardings`` leaves may be ``jax.sharding.Sharding`` objects, or raw
+    ``PartitionSpec``s when ``mesh`` is given (the checkpoint records specs,
+    not device lists). Spec axis names that the TARGET mesh does not carry —
+    the stage axis after an elastic restart with pipelining switched off, or
+    any axis the new mesh holds at size 1 (meshes drop size-1 axes when the
+    topology shrinks) — are stripped before binding: sharding a dim over a
+    missing/trivial axis IS replication over it, so the strip is
+    bit-preserving by construction, and without it ``NamedSharding``
+    construction rejects the stale ``"stage"`` entry outright.
     """
-    return jax.tree.map(lambda x, s: jax.device_put(x, s), comp_state, shardings)
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def norm_axes(entry, live):
+        # one PartitionSpec entry: name, tuple of names, or None
+        if entry is None:
+            return None
+        names = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(n for n in names if n in live)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+
+    def resolve(s):
+        if not isinstance(s, PartitionSpec):
+            return s
+        if mesh is None:
+            raise ValueError(
+                "remap_error_state got a raw PartitionSpec leaf; pass the "
+                "target mesh to bind it (or pass Sharding leaves)"
+            )
+        live = {
+            n for n, sz in zip(mesh.axis_names, mesh.devices.shape) if sz > 1
+        }
+        return NamedSharding(mesh, PartitionSpec(*(norm_axes(e, live) for e in s)))
+
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, resolve(s)), comp_state, shardings
+    )

@@ -63,39 +63,76 @@ def accumulate(
 class PipelineCommModel:
     """Static per-step pipeline (stage-axis) traffic accounting.
 
-    Orthogonal to the SASG upload counters above: the GPipe ring moves one
-    microbatch activation per stage per tick over ``n_micro + stages - 1``
-    ticks (dist/pipeline.py), every step, regardless of the send/skip
-    decisions. ``gather_bits`` additionally accounts the stage-axis
-    GRADIENT-exchange traffic per step — the k-sized payload all-gather on
-    the payload-gather hot path (plus the tiny prepare-grad psum), or the
-    d-sized dense stage combine on the fallback path. Surfaced by the train
-    step as ``pipe_ring_bits_step`` / ``pipe_gather_bits_step`` (and their
-    sum ``pipe_bits_step``) and by ``benchmarks/run.py --stages``.
+    Orthogonal to the SASG upload counters above: the activation ring runs
+    every step, regardless of the send/skip decisions. Two engines
+    (``dist/pipeline.py``):
+
+    - ``"gpipe"``: one dense fp32 microbatch activation per stage per tick
+      over ``n_micro + stages - 1`` ticks, plus the final output-replicating
+      psum (``n_micro`` activation hops per stage).
+    - ``"1f1b"`` (the default): forward carries AND backward cotangent
+      carries, ``n_micro + stages - 2`` hops each per stage, all in the
+      ``ActivationLayout`` wire format (``hop_payload_bits`` — the dense
+      wire-dtype cast or the blocked top-k payload,
+      ``bits.activation_payload_bits``); the finished-output broadcast is a
+      stage-axis all-reduce of the encoded ``n_micro``-activation block, so
+      each stage pays the ring all-reduce factor ``2(S-1)/S`` of
+      ``bcast_payload_bits``.
+
+    ``gather_bits`` additionally accounts the stage-axis GRADIENT-exchange
+    traffic per step — the k-sized payload all-gather on the payload-gather
+    hot path (plus the tiny prepare-grad psum), or the d-sized dense stage
+    combine on the fallback path. Surfaced by the train step as
+    ``pipe_ring_bits_step`` / ``pipe_gather_bits_step`` (and their sum
+    ``pipe_bits_step``) and by ``benchmarks/run.py --stages``; the HLO audit
+    gates the compiled ring wire bytes against this model.
     """
 
     stages: int
     n_micro: int
     act_elems: int              # elements in ONE microbatch activation
-    bits_per_elem: int = 32     # ring payload width (16 for bf16 compute)
+    bits_per_elem: int = 32     # dense ring payload width (GPipe engine)
     gather_bits: float = 0.0    # stage-axis gradient-exchange bits per step
+    engine: str = "gpipe"       # "gpipe" | "1f1b"
+    hop_payload_bits: float | None = None    # encoded per-hop bits (1f1b);
+    #                                          None -> dense act_elems * bpe
+    bcast_payload_bits: float | None = None  # encoded output-broadcast bits
 
     @property
     def ticks(self) -> int:
+        if self.engine == "1f1b":
+            return self.n_micro + 2 * (self.stages - 1)
         return self.n_micro + self.stages - 1
+
+    def _dense_act_bits(self) -> float:
+        return float(self.act_elems) * self.bits_per_elem
+
+    def _hop_bits(self) -> float:
+        if self.hop_payload_bits is not None:
+            return float(self.hop_payload_bits)
+        return self._dense_act_bits()
 
     def bits_per_stage_per_step(self) -> float:
         """ppermute traffic one stage emits per training step."""
-        return float(self.ticks) * self.act_elems * self.bits_per_elem
+        if self.engine == "1f1b":
+            shifts = 2 * max(self.n_micro + self.stages - 2, 0)
+            return shifts * self._hop_bits()
+        return float(self.ticks) * self._dense_act_bits()
 
     def ring_bits_per_step(self) -> float:
-        """Activation-ring traffic per step: every stage's per-tick ppermute
-        sends, plus the final psum that replicates the ``n_micro`` finished
-        microbatch outputs to each stage (n_micro activation hops per
-        stage)."""
+        """Activation-ring traffic per step, summed over stages: the
+        per-tick carries plus the finished-output broadcast."""
+        if self.engine == "1f1b":
+            bcast = (
+                float(self.bcast_payload_bits)
+                if self.bcast_payload_bits is not None
+                else self.n_micro * self._dense_act_bits()
+            )
+            ar = 2.0 * (self.stages - 1) / max(self.stages, 1)
+            return self.stages * (self.bits_per_stage_per_step() + ar * bcast)
         return self.stages * (
             self.bits_per_stage_per_step()
-            + self.n_micro * self.act_elems * self.bits_per_elem
+            + self.n_micro * self._dense_act_bits()
         )
 
     def bits_per_step(self) -> float:

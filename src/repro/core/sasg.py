@@ -41,7 +41,7 @@ import jax.numpy as jnp
 # submodule imports (not the repro.comm package __init__) so that importing
 # repro.comm first does not cycle through repro.core -> sasg -> repro.comm
 from repro.comm.collectives import pmean_tree, psum_scalar
-from repro.comm.transport import Transport, build_transport
+from repro.comm.transport import ActivationLayout, Transport, build_transport
 
 from .compressors import CompressorConfig, CompressorDef
 from .selection import (
@@ -62,6 +62,13 @@ class SASGConfig:
     fold_lr: bool = True                  # paper folds gamma into the compressed g
     stale_params_dtype: str = "float32"   # bf16 = beyond-paper memory saving
     name: str = "sasg"
+    # pipeline-parallel knobs (no effect without a stage axis):
+    pipeline_engine: str = "1f1b"         # "1f1b" | "gpipe" (reference)
+    act_layout: Optional[ActivationLayout] = None  # 1F1B ring wire format
+    # overlap: dispatch per-bucket collectives as gradients complete and
+    # commit EF state double-buffered AFTER the collectives
+    # (Transport.exchange_overlapped) — bit-identical to the sync exchange
+    overlap: bool = False
 
 
 # -- presets: the paper's four algorithms -----------------------------------
@@ -179,7 +186,7 @@ def build_exchange(
     transport = build_transport(
         cfg.compressor, worker_axes, num_workers,
         leaf_specs=leaf_specs, axis_sizes=axis_sizes, grad_combine=grad_combine,
-        stage=stage,
+        stage=stage, act_layout=cfg.act_layout,
     )
     compressor = transport.compressor
     sel = cfg.selection
@@ -287,10 +294,25 @@ def build_exchange(
         # collective-free over stages just like in the flat run
         payload_fresh = transport.gather_payload(payload_fresh)
 
-        payload = tree_where(send, payload_fresh, wstate.stale_cache)
-        comp_state_new = tree_where(send, comp_state_cand, wstate.comp_state)
-
-        update = transport.densify(transport.exchange(payload), g)
+        if cfg.overlap:
+            # per-bucket select -> dispatch as each gradient bucket is ready,
+            # EF commit emitted AFTER the collectives (double-buffered
+            # candidate/old state pair) — bit-identical per-leaf ops to the
+            # sync path below. The traced ``send`` is passed even when the
+            # rule is off (it is then the constant-True first-step mask) so
+            # both paths emit the SAME where-gates: dropping them would
+            # change the program around the step's psums and XLA's
+            # all-reduce regrouping can shift their summation order by an
+            # ulp (send=None remains a transport-level API for callers whose
+            # sync path has no gates at all).
+            update, payload, comp_state_new = transport.exchange_overlapped(
+                payload_fresh, wstate.stale_cache, comp_state_cand,
+                wstate.comp_state, send, g,
+            )
+        else:
+            payload = tree_where(send, payload_fresh, wstate.stale_cache)
+            comp_state_new = tree_where(send, comp_state_cand, wstate.comp_state)
+            update = transport.densify(transport.exchange(payload), g)
 
         if sel.enabled:
             stale_params_new = tree_where(

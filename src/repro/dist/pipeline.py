@@ -102,10 +102,36 @@ def tree_get(tree, path: tuple):
 def resolve_microbatches(batch_size: int, requested: int) -> int:
     """Largest microbatch count <= ``requested`` that divides the batch
     (the LASG probe sub-batch may not divide the configured count; 1 always
-    works). Static ints only — runs at trace time."""
-    for nm in range(min(max(requested, 1), batch_size), 1, -1):
+    works). Static ints only — runs at trace time.
+
+    A ``requested`` the batch cannot honor degrades with a warning instead of
+    silently: ``n_micro=1`` serializes the pipeline (every stage but one
+    idles each tick), which is a real perf cliff the dryrun/metrics reader
+    should see. ``requested <= 1`` is an explicit ask for no microbatching
+    and stays silent.
+    """
+    req = min(max(requested, 1), batch_size)
+    for nm in range(req, 1, -1):
         if batch_size % nm == 0:
+            if nm != requested and requested > 1:
+                import warnings
+
+                warnings.warn(
+                    f"resolve_microbatches: batch_size={batch_size} is not "
+                    f"divisible by the requested {requested} microbatches; "
+                    f"degrading to {nm}",
+                    stacklevel=2,
+                )
             return nm
+    if requested > 1:
+        import warnings
+
+        warnings.warn(
+            f"resolve_microbatches: batch_size={batch_size} has no divisor "
+            f"<= requested {requested}; degrading to 1 microbatch (the "
+            "pipeline serializes — only one stage is busy per tick)",
+            stacklevel=2,
+        )
     return 1
 
 
@@ -233,9 +259,211 @@ def build_stage_combine(pdef, axis: str = "stage") -> Callable:
     return gather
 
 
+# ---------------------------------------------------------------------------
+# 1F1B schedule (the default engine since the compressed-activation-ring PR)
+# ---------------------------------------------------------------------------
+
+def _tree_set(tree, path: tuple, value):
+    """Return ``tree`` with the subtree at ``path`` replaced (dict trees)."""
+    if not path:
+        return value
+    out = dict(tree)
+    out[path[0]] = _tree_set(tree[path[0]], path[1:], value)
+    return out
+
+
+def _batch_rows(batch, lo: int, hi: int, b: int):
+    """Static row slice of every batch leaf with a leading batch dim."""
+    return jax.tree.map(
+        lambda v: v[lo:hi]
+        if (hasattr(v, "ndim") and v.ndim >= 1 and v.shape[0] == b) else v,
+        batch,
+    )
+
+
+def pipeline_vag_1f1b(pdef, params, batch, axis: str = "stage",
+                      microbatches: int = 0, act_layout=None,
+                      stage_local: bool = False):
+    """One-forward-one-backward pipelined value-and-grad. Call inside a
+    shard_map whose manual set contains ``axis``.
+
+    Schedule: microbatch ``i`` runs forward on stage ``s`` at tick
+    ``t = i + s`` and backward at ``t = i + 2(S-1) - s`` — the last stage
+    turns each microbatch around in the same tick, so from tick ``S-1`` on
+    every stage alternates one forward with one backward. Total
+    ``n + 2(S-1)`` ticks (statically unrolled; forward runs only in ticks
+    ``[0, n+S-2]``, backward only in ``[S-1, n+2S-3]``, so per-stage work is
+    GPipe's tick count in each direction). Unlike GPipe-under-autodiff,
+    which keeps every microbatch's autodiff residuals live until the loop
+    ends, in-flight state here is a ``2S-1``-slot stash of the
+    stage-forward VJP RESIDUALS (``jax.vjp`` closures are pytrees with one
+    treedef for every tick). The loop is statically unrolled, so each slot
+    is plain per-tick values in a Python list; the backward picks its
+    stage's slot with an ``S-1``-deep stage-index select — no ring-buffer
+    stacking or copy traffic — and rebuilds the cotangent function from the
+    stashed leaves: no forward recompute, and live residuals stay O(S)
+    microbatches per stage for any ``n``.
+
+    The wire is owned by ``comm.transport.ActivationLayout``: every forward
+    carry, backward cotangent carry, and the finished-output broadcast is
+    ``encode``d to its wire parts and moved by the ``repro.comm`` ring
+    collectives. The default identity layout is bit-exact (and the broadcast
+    degenerates to GPipe's ``psum(where(last, out, 0))``); compressed
+    layouts decode to the SAME values on every stage, so losses/gradients
+    stay stage-consistent (the gradient is exact for the compressed-forward
+    computation).
+
+    Numerics contract: ``pdef.finish`` must be a mean over leading-dim
+    examples (true for every model here — CE/MSE means), so seeding each
+    microbatch's loss-vjp with ``1/n_micro`` reproduces the full-batch
+    cotangent; for power-of-two microbatch splits this is bit-exact, else
+    fp-reassociation-level (same tier as GPipe's microbatch accumulation).
+
+    Returns ``(loss, grads)`` with the true loss replicated over the stage
+    axis. ``stage_local=False``: non-trunk grads are stage-0-masked partials
+    (the dense ``build_stage_combine`` psum/gather semantics); ``True``:
+    finish-side grads replicated, prepare-side grads true on stage 0 and
+    zero elsewhere, trunk grads stage-local — the payload-gather contract of
+    ``build_stage_local_grads``.
+    """
+    from repro.comm.transport import ActivationLayout
+
+    layout = act_layout or ActivationLayout()
+
+    wseg = tree_get(params, pdef.trunk_path)
+    # prepare's vjp is taken NOW so its forward runs once (the residuals
+    # ride through the loop; the cotangent seed arrives after the drain)
+    h, prep_vjp = jax.vjp(lambda p: pdef.prepare(p, batch), params)
+    b = h.shape[0]
+    S = jax.lax.psum(1, axis)        # static axis size (concrete-operand psum)
+    n = resolve_microbatches(b, microbatches or S)
+    mb = b // n
+    micro_x = h.reshape((n, mb) + h.shape[1:])
+    layers_local = jax.tree.leaves(wseg)[0].shape[0]
+    stage_fn = build_pipelined_forward(pdef.layer_fn, layers_local, axis)
+
+    s_idx = jax.lax.axis_index(axis)
+    first = s_idx == 0
+    last = s_idx == S - 1
+    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+    bwd_perm = [(i, (i - 1) % S) for i in range(S)]
+
+    T = n + 2 * (S - 1)              # total ticks
+    W = 2 * S - 1                    # stash depth: max fwd->bwd lag + 1
+    inv_n = 1.0 / n
+
+    act_shape = micro_x.shape[1:]
+    act_dtype = micro_x.dtype
+    zero_act = jnp.zeros(act_shape, act_dtype)
+    fwd_parts = layout.encode(zero_act)
+    bwd_parts = layout.encode(zero_act)
+    out = jnp.zeros_like(micro_x)
+    # residual stash: W static slots of the stage-forward vjp closure's
+    # leaves (one treedef for every tick — same function, same shapes)
+    _, _vjp0 = jax.vjp(stage_fn, wseg, zero_act)
+    _res0, res_tree = jax.tree.flatten(_vjp0)
+    stash = [list(_res0) for _ in range(W)]
+    dwseg = jax.tree.map(jnp.zeros_like, wseg)
+    dmicro = jnp.zeros_like(micro_x)
+    y = zero_act
+    dx = zero_act
+    dy = zero_act
+
+    def mb_loss(yy, i):
+        # per-microbatch finish loss on the matching static batch rows
+        return pdef.finish(params, yy, _batch_rows(batch, i * mb, (i + 1) * mb, b))
+
+    for t in range(T):
+        do_fwd = t <= n + S - 2
+        do_bwd = S - 1 <= t <= T - 1
+        if do_fwd:
+            # stage 0 feeds fresh microbatches (re-feeding the last one on
+            # drain ticks — never lands in ``out``); later stages decode what
+            # the ring delivered last tick.
+            x_in = jnp.where(
+                first, micro_x[min(t, n - 1)],
+                layout.decode(fwd_parts, act_shape, act_dtype),
+            )
+            y, fvjp_t = jax.vjp(stage_fn, wseg, x_in)
+            stash[t % W] = jax.tree.leaves(fvjp_t)
+            done = t - (S - 1)       # microbatch finishing at this tick
+            if 0 <= done < n:
+                out = out.at[done].set(y)
+                # last stage turns the microbatch around NOW (the 1F1B in
+                # 1F1B): its loss cotangent seeds this same tick's backward
+                _ly, fvjp = jax.vjp(lambda yy: mb_loss(yy, done), y)
+                (dy,) = fvjp(jnp.full((), inv_n, _ly.dtype))
+        if do_bwd:
+            ct = jnp.where(
+                last, dy, layout.decode(bwd_parts, act_shape, act_dtype)
+            )
+            # stage s backs up microbatch i_b = t - 2(S-1) + s this tick;
+            # out-of-range ticks compute on garbage carries and are masked
+            i_b = t - 2 * (S - 1) + s_idx
+            valid = (i_b >= 0) & (i_b < n)
+            # stage s reads the slot its forward wrote at tick t - 2(S-1-s);
+            # t is static, so the choice is an (S-1)-deep select on s_idx
+            # over plain slot values (out-of-range ticks read stale/zero
+            # slots and are masked by ``valid`` below)
+            leaves = stash[(t - 2 * (S - 1)) % W]
+            for sj in range(1, S):
+                cand = stash[(t - 2 * (S - 1 - sj)) % W]
+                leaves = [
+                    jnp.where(s_idx == sj, c, l)
+                    for l, c in zip(leaves, cand)
+                ]
+            svjp = jax.tree.unflatten(res_tree, leaves)
+            dw, dx = svjp(ct)
+            dwseg = jax.tree.map(
+                lambda acc, d: acc + jnp.where(valid, d, jnp.zeros_like(d)),
+                dwseg, dw,
+            )
+            i0 = t - 2 * (S - 1)     # static: stage 0's microbatch this tick
+            if 0 <= i0 < n:
+                # only stage 0's dx is d(loss)/d(micro_x[i0])
+                dmicro = dmicro.at[i0].set(
+                    jnp.where(first, dx, jnp.zeros_like(dx))
+                )
+        # ring hops for next tick, in wire layout
+        if do_fwd and t < n + S - 2:
+            fwd_parts = comm_collectives.ring_shift_parts(
+                layout.encode(y), axis, fwd_perm
+            )
+        if do_bwd and t < T - 1:
+            bwd_parts = comm_collectives.ring_shift_parts(
+                layout.encode(dx), axis, bwd_perm
+            )
+
+    # replicate the finished outputs: encode once, mask to the last stage,
+    # psum the parts, decode — every stage decodes the SAME values (identity
+    # layout == GPipe's psum(where(last, out, 0)) bitwise)
+    out_parts = comm_collectives.ring_broadcast_parts(
+        layout.encode(out), axis, last
+    )
+    out = layout.decode(out_parts, out.shape, out.dtype)
+    h_all = out.reshape((b,) + out.shape[2:])
+
+    # loss + finish-side param grads, once, from the replicated outputs
+    loss, fvjp = jax.vjp(lambda p: pdef.finish(p, h_all, batch), params)
+    (g_fin,) = fvjp(jnp.ones((), loss.dtype))
+    # prepare-side param grads, seeded by stage 0's input cotangents (zero
+    # elsewhere — microbatches enter the pipe only through stage 0)
+    (g_prep,) = prep_vjp(dmicro.reshape((b,) + dmicro.shape[2:]))
+    g = jax.tree.map(jnp.add, g_fin, g_prep)
+    if not stage_local:
+        # dense-combine contract: non-trunk grads are stage-0-masked
+        # partials, so the downstream stage psum reconstructs them exactly
+        # (handles tied prepare/finish reads: masked sum psums to fin+prep)
+        g = jax.tree.map(
+            lambda x: jnp.where(first, x, jnp.zeros_like(x)), g
+        )
+    g = _tree_set(g, tuple(pdef.trunk_path), dwseg)
+    return loss, g
+
+
 def build_pipelined_vag(
     pdef, axis: str = "stage", microbatches: int = 0, combine: bool = True,
-    stage_local: bool = False,
+    stage_local: bool = False, act_layout=None, engine: str = "1f1b",
 ) -> Callable:
     """Pipelined drop-in for ``jax.value_and_grad(model.loss_fn)`` inside the
     worker shard_map region. With ``combine=True`` (the standalone default)
@@ -250,7 +478,41 @@ def build_pipelined_vag(
     the true replicated loss (no psum needed), trunk grads stay stage-local
     for the transport's k-sized payload gather, and only the tiny
     ``prepare_paths`` grads cross the stage axis
-    (``build_stage_local_grads``). Mutually exclusive with ``combine``."""
+    (``build_stage_local_grads``). Mutually exclusive with ``combine``.
+
+    ``engine`` selects the schedule: ``"1f1b"`` (default — interleaved
+    forward/backward with rematerialization and the ``act_layout``-owned
+    compressed ring, ``pipeline_vag_1f1b``) or ``"gpipe"`` (the synchronous
+    autodiff-through-``pipeline_apply`` loop, kept as the reference engine
+    for the benchmark comparison and the bitwise lint-baselined ring sites).
+    ``act_layout`` (a ``comm.transport.ActivationLayout``) only affects the
+    1F1B engine; GPipe always moves dense fp32 activations.
+    """
+    if engine not in ("1f1b", "gpipe"):
+        raise ValueError(f"unknown pipeline engine {engine!r}")
+
+    if engine == "1f1b":
+        finalize = build_stage_local_grads(pdef, axis) if stage_local else None
+        gather = (
+            build_stage_combine(pdef, axis)
+            if combine and not stage_local else None
+        )
+        if stage_local:
+            assert not combine, "stage_local grads replace the dense combine"
+
+        def vag_1f1b(params, batch):
+            loss, g = pipeline_vag_1f1b(
+                pdef, params, batch, axis, microbatches,
+                act_layout=act_layout, stage_local=stage_local,
+            )
+            if finalize is not None:
+                g = finalize(g)
+            elif gather is not None:
+                g = gather(g)
+            return loss, g
+
+        return vag_1f1b
+
     if stage_local:
         assert not combine, "stage_local grads replace the dense combine"
         loss_fn = build_pipelined_loss(pdef, axis, microbatches, stage_local=True)

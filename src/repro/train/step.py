@@ -24,7 +24,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.comm import bits as bits_lib
-from repro.comm.transport import StageInfo, supports_stage_payload
+from repro.comm.transport import (
+    ActivationLayout as TransportActivationLayout,
+    StageInfo,
+    supports_stage_payload,
+)
 from repro.core import metrics as CM
 from repro.core.sasg import SASGConfig, build_exchange, update_global_state
 from repro.core.types import (
@@ -246,6 +250,7 @@ def build_train_step(
         build_pipelined_vag(
             pdef, stage, strategy.microbatches,
             combine=False, stage_local=payload_mode,
+            act_layout=sasg_cfg.act_layout, engine=sasg_cfg.pipeline_engine,
         )
         if stage is not None else vag
     )
@@ -511,9 +516,11 @@ def build_train_step(
                 "bits_wire_total": counters.bits_wire,
             }
             if stage is not None:
-                # static per-stage ring traffic (CM.PipelineCommModel): one
-                # microbatch activation per stage per tick, every step,
-                # independent of the send/skip decisions
+                # static per-stage ring traffic (CM.PipelineCommModel), every
+                # step, independent of the send/skip decisions. Engine-aware:
+                # the 1F1B ring moves ActivationLayout wire parts (compressed
+                # hop + broadcast payload bits); GPipe moves dense microbatch
+                # activations per tick.
                 wbatch = jax.tree.map(
                     lambda x: jax.ShapeDtypeStruct(
                         (x.shape[0] // M,) + x.shape[1:], x.dtype
@@ -527,11 +534,16 @@ def build_train_step(
                 nm = resolve_microbatches(
                     h.shape[0], strategy.microbatches or strategy.pipeline_stages
                 )
+                act_elems = int(np.prod(h.shape)) // nm
+                layout = sasg_cfg.act_layout or TransportActivationLayout()
                 pipe = CM.PipelineCommModel(
                     stages=strategy.pipeline_stages, n_micro=nm,
-                    act_elems=int(np.prod(h.shape)) // nm,
+                    act_elems=act_elems,
                     bits_per_elem=h.dtype.itemsize * 8,
                     gather_bits=gather_bits_step,
+                    engine=sasg_cfg.pipeline_engine,
+                    hop_payload_bits=layout.payload_bits(act_elems),
+                    bcast_payload_bits=layout.payload_bits(nm * act_elems),
                 )
                 mets["pipe_stages"] = jnp.float32(strategy.pipeline_stages)
                 mets["pipe_ring_bits_step"] = jnp.float32(pipe.ring_bits_per_step())

@@ -3,7 +3,8 @@
 Loaded by conftest.py ONLY when the real package is unavailable (the test
 image cannot install new dependencies). Implements exactly the surface the
 property tests use — ``@given`` + ``@settings`` with ``integers`` /
-``floats`` / ``sampled_from`` strategies — by running ``max_examples``
+``floats`` / ``sampled_from`` / ``booleans`` / ``tuples`` strategies — by
+running ``max_examples``
 seeded pseudo-random cases per test. No shrinking, no database, no phases:
 a falsifying example is reported verbatim and the run fails.
 """
@@ -34,6 +35,14 @@ class _StrategiesModule:
     def sampled_from(elements):
         elements = list(elements)
         return _Strategy(lambda r: r.choice(elements))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(lambda r: tuple(s.example_from(r) for s in strats))
 
 
 strategies = _StrategiesModule()

@@ -90,7 +90,16 @@ def flat_pipe_check():
     pipe_gather_bits_step). Finishes by asserting the cumulative rounds/bits
     counters agree. Returns the built steps, final states, and the per-step
     send history for test-specific follow-up asserts.
+
+    ``overlap_leg=True`` (the default) additionally builds the SAME
+    pipelined config with ``overlap=True`` — the per-bucket dispatch +
+    double-buffered EF commit (``Transport.exchange_overlapped``) — and
+    asserts it is BIT-IDENTICAL to the synchronous pipelined run every step
+    (params, sends, losses): overlapping the exchange with backward compute
+    must not move a single bit of error-feedback state.
     """
+    import dataclasses as _dc
+
     import numpy as np
 
     from repro.dist.strategy import choose_strategy
@@ -98,7 +107,7 @@ def flat_pipe_check():
     from repro.train import build_train_step
 
     def run(model, scfg, mesh_flat, mesh_pipe, stages, batches, lr=0.05,
-            param_tol=2e-2, loss_rtol=1e-2):
+            param_tol=2e-2, loss_rtol=1e-2, overlap_leg=True):
         s_flat = choose_strategy(mesh_flat, sasg_enabled=True)
         s_pipe = choose_strategy(
             mesh_pipe, sasg_enabled=True, pipeline_stages=stages,
@@ -110,6 +119,12 @@ def flat_pipe_check():
         assert bf.bits_wire == bp.bits_wire and bf.bits_paper == bp.bits_paper
         sf, sp = bf.init(jax.random.PRNGKey(0)), bp.init(jax.random.PRNGKey(0))
         assert max_param_diff(sf, sp) == 0.0
+        bo = so = None
+        if overlap_leg:
+            bo = build_train_step(model, _dc.replace(scfg, overlap=True),
+                                  mesh_pipe, s_pipe, constant(lr))
+            assert bo.bits_wire == bp.bits_wire
+            so = bo.init(jax.random.PRNGKey(0))
         sents = []
         for batch in batches:
             sf, mf = bf.jit_step(sf, batch)
@@ -119,6 +134,11 @@ def flat_pipe_check():
             np.testing.assert_allclose(float(mf["loss"]), float(mp["loss"]),
                                        rtol=loss_rtol)
             assert max_param_diff(sf, sp) < param_tol
+            if overlap_leg:
+                so, mo = bo.jit_step(so, batch)
+                assert float(mo["num_sent"]) == float(mp["num_sent"])
+                assert float(mo["loss"]) == float(mp["loss"])
+                assert max_param_diff(so, sp) == 0.0
             # only pipelined runs surface the stage-axis traffic, split into
             # the activation ring and the gradient payload gather
             assert "pipe_bits_step" not in mf
@@ -127,12 +147,19 @@ def flat_pipe_check():
                 float(mp["pipe_ring_bits_step"])
                 + float(mp["pipe_gather_bits_step"])
             )
+        if overlap_leg:
+            # the double-buffered EF commit leaves the FULL worker state —
+            # error buffers, stale payload cache, taus — bit-identical
+            for a, b in zip(jax.tree.leaves(so.wstate),
+                            jax.tree.leaves(sp.wstate)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         assert float(sf.counters.rounds) == float(sp.counters.rounds)
         np.testing.assert_allclose(float(sf.counters.bits_wire),
                                    float(sp.counters.bits_wire), rtol=1e-6)
         np.testing.assert_allclose(float(sf.counters.bits_paper),
                                    float(sp.counters.bits_paper), rtol=1e-6)
-        return {"bf": bf, "bp": bp, "sf": sf, "sp": sp, "sents": sents}
+        return {"bf": bf, "bp": bp, "sf": sf, "sp": sp, "sents": sents,
+                "bo": bo, "so": so}
 
     return run
 

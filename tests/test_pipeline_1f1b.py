@@ -1,0 +1,291 @@
+"""1F1B engine + compressed activation ring: schedule and wire-format suite.
+
+Covers the PR-8 seams:
+
+- ``resolve_microbatches`` no longer degrades silently: prime batch sizes
+  and indivisible requests warn (``n_micro=1`` serializes the pipeline);
+  ``requested <= 1`` is an explicit ask and stays silent;
+- the 1F1B engine (``pipeline_vag_1f1b``) is bit-compatible with the GPipe
+  reference engine under the identity activation layout, and matches the
+  sequential model for compressed layouts' *structure* (runs, replicated
+  loss, full grads);
+- ``ActivationLayout``: identity encode/decode is the bitwise identity, the
+  blocked top-k round trip preserves the selected support, and
+  ``payload_bits`` agrees with the actual encoded wire arrays;
+- legacy ``topk_impl`` spellings ("sharded"/"block") still resolve through
+  ``CompressorConfig.resolved_layout/resolved_impl`` AND through the new
+  default-1F1B pipelined train step (payload path for per-shard, dense
+  fallback for per-tensor);
+- the engine knob: unknown engines fail eagerly, ``pipeline_engine="gpipe"``
+  still builds the reference schedule, and a compressed ``act_layout``
+  shrinks the modeled ring bits ≥ 10x below the dense GPipe model.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.compat
+from repro.comm.transport import ActivationLayout
+from repro.configs import get_config
+from repro.core import CompressorConfig, SASGConfig, SelectionConfig
+from repro.core import metrics as CM
+from repro.dist.pipeline import build_pipelined_vag, resolve_microbatches
+from repro.dist.strategy import choose_strategy
+from repro.models import build
+from repro.models.model import PipelineDef
+from repro.optim import constant
+from repro.train import build_train_step
+
+
+# ---------------------------------------------------------------------------
+# resolve_microbatches: loud degradation (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_resolve_microbatches_warns_on_degrade():
+    # prime batch size: nothing divides -> serializes to 1, loudly
+    with pytest.warns(UserWarning, match="degrading to 1"):
+        assert resolve_microbatches(7, 4) == 1
+    with pytest.warns(UserWarning, match="degrading to 1"):
+        assert resolve_microbatches(13, 8) == 1
+    # divisible-but-smaller fallback warns too (still a perf change)
+    with pytest.warns(UserWarning, match="degrading to 3"):
+        assert resolve_microbatches(6, 4) == 3
+    with pytest.warns(UserWarning, match="degrading to 6"):
+        assert resolve_microbatches(12, 8) == 6
+
+
+def test_resolve_microbatches_silent_cases():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        # exact divisors: no degradation, no warning
+        assert resolve_microbatches(8, 4) == 4
+        assert resolve_microbatches(12, 12) == 12
+        # requested <= 0 clamps to 1 (explicit no-microbatching), silent
+        assert resolve_microbatches(8, 0) == 1
+        assert resolve_microbatches(7, 0) == 1
+        assert resolve_microbatches(5, 1) == 1
+        assert resolve_microbatches(1, 1) == 1
+
+
+# ---------------------------------------------------------------------------
+# engines: 1F1B == GPipe == sequential on a toy PipelineDef
+# ---------------------------------------------------------------------------
+
+def _layer_fn(w, h):
+    return jnp.tanh(h @ w)
+
+
+def _toy_pdef(n_layers):
+    return PipelineDef(
+        n_layers=n_layers,
+        trunk_path=("trunk",),
+        prepare=lambda params, batch: batch["x"] @ params["w_in"],
+        layer_fn=_layer_fn,
+        finish=lambda params, h, batch: jnp.mean(
+            (h @ params["w_out"] - batch["y"]) ** 2
+        ),
+    )
+
+
+def _toy_setup(n_layers=4, b=8, d_in=5, d=6, d_out=3, seed=2):
+    rng = np.random.default_rng(seed)
+    params = {
+        "w_in": jnp.asarray(rng.normal(size=(d_in, d)).astype(np.float32) * 0.4),
+        "trunk": jnp.asarray(
+            rng.normal(size=(n_layers, d, d)).astype(np.float32) * 0.3
+        ),
+        "w_out": jnp.asarray(rng.normal(size=(d, d_out)).astype(np.float32) * 0.4),
+    }
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(b, d_in)).astype(np.float32)),
+        "y": jnp.asarray(rng.normal(size=(b, d_out)).astype(np.float32)),
+    }
+    return params, batch
+
+
+def _run_engine(S, engine, act_layout=None, n_layers=4):
+    params, batch = _toy_setup(n_layers=n_layers)
+    pdef = _toy_pdef(n_layers)
+    vag = build_pipelined_vag(pdef, axis="stage", engine=engine,
+                              act_layout=act_layout)
+    mesh = repro.compat.make_mesh((S,), ("stage",))
+    sm = jax.shard_map(
+        vag, mesh=mesh,
+        in_specs=({"w_in": P(), "trunk": P("stage"), "w_out": P()}, P()),
+        out_specs=(P(), {"w_in": P(), "trunk": P(), "w_out": P()}),
+        axis_names={"stage"}, check_vma=False,
+    )
+    loss, g = jax.jit(sm)(params, batch)
+
+    def ref_loss(params_, batch_):
+        h = pdef.prepare(params_, batch_)
+        for l in range(n_layers):
+            h = _layer_fn(params_["trunk"][l], h)
+        return pdef.finish(params_, h, batch_)
+
+    loss_r, g_r = jax.value_and_grad(ref_loss)(params, batch)
+    return loss, g, loss_r, g_r
+
+
+@pytest.mark.parametrize("S", [1, 2, 4])
+def test_1f1b_matches_sequential(S):
+    loss, g, loss_r, g_r = _run_engine(S, "1f1b")
+    np.testing.assert_allclose(float(loss), float(loss_r), rtol=1e-6)
+    for k in g_r:
+        np.testing.assert_allclose(np.asarray(g[k]), np.asarray(g_r[k]),
+                                   rtol=1e-4, atol=1e-6, err_msg=k)
+
+
+@pytest.mark.parametrize("S", [2, 4])
+def test_1f1b_matches_gpipe_identity_layout(S):
+    """With the identity layout the two engines compute the same microbatch
+    forwards and the same output broadcast, so losses are bitwise equal and
+    gradients agree to accumulation-order reassociation."""
+    l1, g1, _, _ = _run_engine(S, "1f1b")
+    l2, g2, _, _ = _run_engine(S, "gpipe")
+    assert float(l1) == float(l2)
+    for k in g1:
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   rtol=0, atol=1e-7, err_msg=k)
+
+
+def test_1f1b_compressed_layout_runs_and_is_stage_consistent():
+    """A lossy wire layout still yields a replicated loss and full grads (all
+    stages decode the SAME values); the loss sits near the exact one."""
+    lay = ActivationLayout(wire_dtype="bfloat16", k_ratio=0.5, block_size=16)
+    loss, g, loss_r, _ = _run_engine(2, "1f1b", act_layout=lay)
+    assert np.isfinite(float(loss))
+    # lossy but not garbage: same order of magnitude as the exact loss
+    assert abs(float(loss) - float(loss_r)) < 0.5 * abs(float(loss_r)) + 0.1
+    for k in g:
+        assert np.all(np.isfinite(np.asarray(g[k])))
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError, match="unknown pipeline engine"):
+        build_pipelined_vag(_toy_pdef(4), axis="stage", engine="interleaved2")
+
+
+# ---------------------------------------------------------------------------
+# ActivationLayout: wire format properties
+# ---------------------------------------------------------------------------
+
+def test_activation_layout_identity_roundtrip_bitwise():
+    lay = ActivationLayout()
+    assert lay.is_identity
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, 5, 7))
+                    .astype(np.float32))
+    parts = lay.encode(x)
+    assert len(parts) == 1 and parts[0].dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(lay.decode(parts, x.shape, x.dtype)), np.asarray(x)
+    )
+
+
+def test_activation_layout_topk_roundtrip_support():
+    lay = ActivationLayout(wire_dtype="float32", k_ratio=0.25, block_size=8)
+    assert not lay.is_identity
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    vals, idxs = lay.encode(x)
+    assert idxs.dtype == jnp.uint8          # block-local indices, block <= 256
+    dec = np.asarray(lay.decode((vals, idxs), x.shape, x.dtype))
+    xf = np.asarray(x).reshape(-1)
+    # decoded entries are either zero or exactly the original value
+    nz = dec.reshape(-1) != 0
+    np.testing.assert_array_equal(dec.reshape(-1)[nz], xf[nz])
+    # per block of 8, exactly k=2 survivors, and they are the top-|.| ones
+    blocks = xf.reshape(-1, 8)
+    kept = nz.reshape(-1, 8)
+    assert (kept.sum(axis=1) == 2).all()
+    for bi in range(blocks.shape[0]):
+        top2 = set(np.argsort(-np.abs(blocks[bi]))[:2])
+        assert set(np.nonzero(kept[bi])[0]) <= set(range(8))
+        assert set(np.nonzero(kept[bi])[0]) == top2 or np.isclose(
+            np.abs(blocks[bi][sorted(top2)[-1]]),
+            np.abs(blocks[bi][np.nonzero(kept[bi])[0]]).min(),
+        )
+
+
+def test_activation_layout_payload_bits_match_encode():
+    """The analytic ``payload_bits`` (shared with PipelineCommModel and the
+    HLO audit) equals the actual bit-width of the encoded wire arrays."""
+    for lay, elems in (
+        (ActivationLayout(), 1000),
+        (ActivationLayout(wire_dtype="bfloat16"), 1000),
+        (ActivationLayout(k_ratio=0.05, block_size=256), 32768),
+        (ActivationLayout(wire_dtype="bfloat16", k_ratio=0.05,
+                          block_size=256), 32768),
+    ):
+        x = jnp.ones((elems,), jnp.float32)
+        parts = lay.encode(x)
+        actual = sum(p.size * p.dtype.itemsize * 8 for p in parts)
+        assert lay.payload_bits(elems) == actual, (lay, elems)
+
+
+def test_compressed_ring_model_10x_below_dense():
+    """The PR's acceptance shape: bf16 + 5% blocked top-k on the 1F1B ring
+    models ≥ 10x fewer ring bits than the dense GPipe ring, same geometry."""
+    S, n, act = 2, 2, 32768
+    lay = ActivationLayout(wire_dtype="bfloat16", k_ratio=0.05, block_size=256)
+    dense = CM.PipelineCommModel(stages=S, n_micro=n, act_elems=act)
+    comp = CM.PipelineCommModel(
+        stages=S, n_micro=n, act_elems=act, engine="1f1b",
+        hop_payload_bits=lay.payload_bits(act),
+        bcast_payload_bits=lay.payload_bits(n * act),
+    )
+    assert dense.ring_bits_per_step() / comp.ring_bits_per_step() >= 10.0
+
+
+# ---------------------------------------------------------------------------
+# legacy topk_impl spellings through the default-1F1B train step (satellite 2)
+# ---------------------------------------------------------------------------
+
+def _cnn_model(width=16):
+    return build(dataclasses.replace(get_config("cnn_cifar"), d_model=width))
+
+
+def _cnn_batches(n, b=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{
+        "x": jnp.asarray(rng.normal(size=(b, 32, 32, 3)).astype(np.float32)),
+        "labels": jnp.asarray(rng.integers(0, 10, size=(b,)).astype(np.int32)),
+    } for _ in range(n)]
+
+
+@pytest.mark.parametrize("spelling,layout,impl,payload_path", [
+    ("sharded", "per_shard", "reference", True),
+    ("block", "per_tensor", "reference", False),
+])
+def test_legacy_spellings_resolve_through_1f1b_step(spelling, layout, impl,
+                                                    payload_path):
+    """The pre-rename configs (topk_impl="sharded"/"block") must keep
+    resolving — and keep BUILDING — through the new default-1F1B scheduler:
+    "sharded" lands on the per-shard payload-gather hot path, "block" on the
+    per-tensor dense fallback."""
+    cfg = CompressorConfig(name="topk_ef", k_ratio=0.05, block_size=64,
+                           topk_impl=spelling)
+    assert cfg.resolved_layout() == layout
+    assert cfg.resolved_impl() == impl
+
+    model = _cnn_model()
+    scfg = SASGConfig(compressor=cfg, selection=SelectionConfig(enabled=False),
+                      name=f"legacy_{spelling}")
+    assert scfg.pipeline_engine == "1f1b"   # the new default schedule
+    mesh = repro.compat.make_mesh((2, 2), ("data", "stage"))
+    s_pipe = choose_strategy(mesh, sasg_enabled=True, pipeline_stages=2,
+                             trunk_layers=model.pipeline.n_layers)
+    built = build_train_step(model, scfg, mesh, s_pipe, constant(0.05))
+    assert built.exchange.transport.layout == layout
+    assert (built.exchange.transport.stage is not None) == payload_path
+
+    state = built.init(jax.random.PRNGKey(0))
+    for batch in _cnn_batches(2):
+        state, mets = built.jit_step(state, batch)
+        assert np.isfinite(float(mets["loss"]))
+        assert float(mets["pipe_ring_bits_step"]) > 0

@@ -301,6 +301,61 @@ def test_remap_across_stage_counts_synthetic():
         stripped, is_leaf=lambda x: isinstance(x, P)))
 
 
+def test_remap_stage_axis_shrinks_to_one():
+    """Elastic restart with pipelining switched OFF: the checkpoint's EF
+    specs still name the stage axis, but the restore mesh no longer carries
+    it (or carries it at size 1 — meshes drop trivial axes when the topology
+    shrinks). ``remap_error_state(..., mesh=...)`` accepts the recorded raw
+    PartitionSpecs, strips the stale axis entries (sharding over a
+    missing/size-1 axis IS replication), and the round trip back onto the
+    pipelined mesh is bit-identical."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.dist.sharding import ef_specs, param_specs
+
+    mesh2 = repro.compat.make_mesh((2, 2), ("data", "stage"))
+    mesh_flat = repro.compat.make_mesh((2,), ("data",))
+
+    tree = {"trunk": {"w": jnp.arange(4 * 8 * 8, dtype=jnp.float32)
+                      .reshape(4, 8, 8)},
+            "head": {"w": jnp.ones((8, 8), jnp.float32)}}
+    ref = jax.tree.map(np.asarray, tree)
+    specs2 = ef_specs(
+        param_specs(tree, mesh2, None, None, stage_axis="stage",
+                    trunk_paths=(("trunk",),)),
+        "stage", stage_sharded=True,
+    )
+    assert "stage" in str(specs2["trunk"]["w"])  # the checkpoint-recorded specs
+    t2 = jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh2, s)), tree, specs2,
+        is_leaf=lambda x: isinstance(x, (jnp.ndarray, np.ndarray)),
+    )
+
+    # stage axis gone entirely: old "stage"-naming specs bind onto the flat
+    # mesh as replicated-over-the-missing-axis, values untouched
+    t_flat = remap_error_state(t2, specs2, mesh=mesh_flat)
+    for k in ("trunk", "head"):
+        np.testing.assert_array_equal(np.asarray(t_flat[k]["w"]), ref[k]["w"])
+        assert "stage" not in str(t_flat[k]["w"].sharding.spec)
+
+    # stage axis present but size 1: same strip, same bits
+    mesh_s1 = repro.compat.make_mesh((2, 1), ("data", "stage"))
+    t_s1 = remap_error_state(t2, specs2, mesh=mesh_s1)
+    for k in ("trunk", "head"):
+        np.testing.assert_array_equal(np.asarray(t_s1[k]["w"]), ref[k]["w"])
+
+    # and back onto the pipelined mesh: bit-identical, stage-sharded again
+    t2b = remap_error_state(t_flat, specs2, mesh=mesh2)
+    for k in ("trunk", "head"):
+        np.testing.assert_array_equal(np.asarray(t2b[k]["w"]), ref[k]["w"])
+    assert "stage" in str(t2b["trunk"]["w"].sharding.spec)
+    assert t2b["trunk"]["w"].addressable_shards[0].data.shape[0] == 4 // 2
+
+    # raw specs without a mesh is an error, not a silent crash downstream
+    with pytest.raises(ValueError, match="PartitionSpec"):
+        remap_error_state(t2, specs2)
+
+
 # ---------------------------------------------------------------------------
 # 4. 16-device 4-stage LM variant (subprocess: device count must be forced
 #    before jax imports; conftest pins the session to 8)
