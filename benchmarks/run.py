@@ -4,6 +4,7 @@ the roofline collector and the pipeline composition bench.
   PYTHONPATH=src python -m benchmarks.run [--full]
   PYTHONPATH=src python -m benchmarks.run --stages 2    # BENCH_pipeline.json
   PYTHONPATH=src python -m benchmarks.run --compressors # BENCH_compressors.json
+  PYTHONPATH=src python -m benchmarks.run --serve       # BENCH_serve.json
 """
 import argparse
 import os
@@ -21,9 +22,26 @@ def main():
     ap.add_argument("--compressors", action="store_true",
                     help="run ONLY the compressor x layout sweep (flat and "
                          "2-stage pipelined); writes BENCH_compressors.json")
+    ap.add_argument("--serve", action="store_true",
+                    help="run ONLY the continuous-batching serve bench "
+                         "(dense vs paged KV cache); writes BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --serve: one arch, one concurrency level "
+                         "(the CI smoke cell)")
     args = ap.parse_args()
 
     t0 = time.time()
+    if args.serve:
+        # fake devices for the 2x2 serve mesh; must precede jax import
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=4"
+        )
+        from benchmarks import serve_bench
+
+        serve_bench.run(smoke=args.smoke)
+        print(f"benchmarks.run complete in {time.time()-t0:.1f}s")
+        return 0
     if args.compressors:
         # fake devices for the worker x stage mesh (see --stages note below)
         os.environ["XLA_FLAGS"] = (

@@ -1,0 +1,135 @@
+"""Continuous-batching serve benchmark (BENCH_serve.json).
+
+For each serveable arch family — global-attention LMs (dense AND paged KV
+cache), SSD and RG-LRU recurrent LMs (dense state, O(1) per slot; nothing
+to page) — runs the reduced config through the BatchedServer at a sweep of
+concurrency levels on fake CPU devices and records tokens/s, tick counts,
+and the cache-memory accounting (pool high-water vs the dense-equivalent
+cache). Every paged cell replays the identical request stream against the
+dense engine and records whether the generated tokens are bit-identical
+(``bitexact_vs_dense`` — they must be on the identity cache dtype; the
+``repro.analysis --check`` gate fails otherwise, same pattern as the
+pipeline ring-bits ceiling). Run via
+
+  PYTHONPATH=src python -m benchmarks.run --serve [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import time
+
+# archs benched per family; paged mode only exists for the global-attention
+# rows (the recurrent families keep O(1) dense state)
+ATTN_ARCHS = ("llama3_8b", "internvl2_2b", "starcoder2_3b")
+RECURRENT_ARCHS = ("mamba2_370m", "recurrentgemma_9b")
+
+NOTE = (
+    "CPU fake-device timing: relative throughput only. Paged cells replay "
+    "the same request stream as their dense twin; bitexact_vs_dense must "
+    "hold on the identity cache dtype (analysis --check gates on it, and "
+    "on high_water_bytes <= dense_equiv_bytes). Cache wire dtypes narrower "
+    "than f32 (cache_dtype=bfloat16) are functional and covered by the "
+    "parity-tolerance test, but are NOT timed here: on CPU XLA hoists the "
+    "decode-side bf16->f32 convert out of the loop and re-materializes the "
+    "full cache at f32, so a bf16 timing row would claim a memory saving "
+    "the lowered CPU executable does not realize. f32-only rows until the "
+    "accelerator backend lands."
+)
+
+
+def _run_server(srv, requests):
+    for r in requests:
+        srv.submit(r)
+    t0 = time.perf_counter()
+    done, pending = srv.drain(strict=True)
+    dt = time.perf_counter() - t0
+    assert not pending
+    stats = srv.cache_stats()
+    stats["wall_s"] = dt
+    stats["tok_per_s"] = stats["decode_tokens"] / max(dt, 1e-9)
+    return {r["uid"]: r["tokens"] for r in done}, stats
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_serve.json") -> dict:
+    import jax
+    import numpy as np
+
+    import repro.compat
+    from repro.configs import get_config
+    from repro.models import build
+    from repro.serve import BatchedServer, Request, build_serve
+
+    mesh = repro.compat.make_mesh((2, 2), ("data", "model"))
+    archs = ("internvl2_2b",) if smoke else ATTN_ARCHS + RECURRENT_ARCHS
+    concurrency = (2,) if smoke else (2, 4)
+    max_new = 4 if smoke else 8
+    max_seq = 64
+
+    def requests_for(cfg, n, rng):
+        return [
+            Request(
+                uid=i,
+                prompt=rng.integers(
+                    0, cfg.vocab_size, size=int(rng.integers(5, 13))
+                ).astype(np.int32),
+                max_new_tokens=max_new,
+            )
+            for i in range(n)
+        ]
+
+    records = []
+    for arch in archs:
+        cfg = get_config(arch).reduced()
+        model = build(cfg)
+        serve = build_serve(model, mesh, fsdp="data", tp="model")
+        params = jax.jit(model.init, out_shardings=serve.param_shardings)(
+            jax.random.PRNGKey(0)
+        )
+        pageable = serve.init_paged_cache is not None
+        # SSD archs need multi-token widths to be scan-chunk multiples;
+        # width-1 ticks always work, so a chunk-sized prefill_chunk keeps
+        # chunked prefill in play for them too
+        chunk = cfg.ssm.chunk_size if "ssd" in cfg.attn_pattern else 8
+        for conc in concurrency:
+            reqs = requests_for(cfg, 2 * conc, np.random.default_rng(0))
+            dense_out, dense_stats = _run_server(
+                BatchedServer(serve, params, cfg, conc, max_seq,
+                              paged=False, prefill_chunk=chunk),
+                reqs,
+            )
+            dense_stats.update(arch=arch, concurrency=conc)
+            records.append(dense_stats)
+            if not pageable:
+                continue
+            paged_out, paged_stats = _run_server(
+                BatchedServer(serve, params, cfg, conc, max_seq,
+                              paged=True, block_size=16, prefill_chunk=chunk),
+                reqs,
+            )
+            paged_stats.update(
+                arch=arch, concurrency=conc,
+                bitexact_vs_dense=paged_out == dense_out,
+            )
+            records.append(paged_stats)
+            mode = "bitexact" if paged_out == dense_out else "MISMATCH"
+            print(f"[serve_bench] {arch} conc={conc}: dense "
+                  f"{dense_stats['tok_per_s']:.1f} tok/s, paged "
+                  f"{paged_stats['tok_per_s']:.1f} tok/s ({mode}, "
+                  f"{paged_stats['high_water_bytes']:.0f}B high-water vs "
+                  f"{paged_stats['dense_equiv_bytes']:.0f}B dense)")
+        if not pageable:
+            print(f"[serve_bench] {arch}: dense-only (recurrent state, "
+                  f"nothing to page)")
+
+    record = {
+        "mesh": {"data": 2, "model": 2},
+        "max_seq": max_seq,
+        "max_new_tokens": max_new,
+        "smoke": smoke,
+        "cells": records,
+        "note": NOTE,
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[serve_bench] {len(records)} cells -> {out_path}")
+    return {"serve": record}

@@ -28,22 +28,20 @@ def main():
 
     srv = BatchedServer(serve, params, cfg, batch_size=4, max_seq=128)
     rng = np.random.default_rng(0)
-    pending = [
-        Request(uid=i,
-                prompt=rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 9))).astype(np.int32),
-                max_new_tokens=8)
-        for i in range(10)
-    ]
-    submitted = 0
-    while pending or any(s is not None for s in srv.slots):
-        while pending and srv.submit(pending[0]):
-            pending.pop(0)
-            submitted += 1
-        srv.tick()
-    print(f"served {submitted} requests in continuous batches of {srv.batch}")
-    for r in sorted(srv.completed, key=lambda r: r["uid"])[:5]:
+    for i in range(10):
+        srv.submit(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 9))).astype(np.int32),
+            max_new_tokens=8,
+        ))
+    done, pending = srv.drain(strict=True)
+    stats = srv.cache_stats()
+    mode = "paged" if srv.paged else "dense"
+    print(f"served {len(done)} requests in continuous batches of {srv.batch} "
+          f"({mode} KV cache)")
+    for r in sorted(done, key=lambda r: r["uid"])[:5]:
         print(f"  request {r['uid']}: generated {r['tokens']}")
-    assert len(srv.completed) == 10
+    assert len(done) == 10 and not pending
 
 
 if __name__ == "__main__":

@@ -126,6 +126,40 @@ def main(argv=None) -> int:
                 print(f"[bench] pipeline ring {ring:.0f} bits/step <= "
                       f"ceiling {ceiling:.0f}")
 
+        # serve-bench regression gate (BENCH_serve.json): every paged cell
+        # must be bit-exact vs its dense twin on the identity cache dtype,
+        # and its block-pool byte high-water must stay at or below the
+        # dense-equivalent cache — the engine's two acceptance claims
+        sb = load_baseline().serve_bench
+        if sb and os.path.exists("BENCH_serve.json"):
+            with open("BENCH_serve.json", encoding="utf-8") as fh:
+                sbench = json.load(fh)
+            ratio = float(sb.get("max_paged_over_dense_bytes_ratio", 1.0))
+            paged_cells = [c for c in sbench.get("cells", [])
+                           if c.get("paged")]
+            if sb.get("require_paged_cells") and not paged_cells:
+                print("  FAIL BENCH_serve.json has no paged cells — "
+                      "regenerate via PYTHONPATH=src python -m "
+                      "benchmarks.run --serve")
+                failed = True
+            n_bad = 0
+            for c in paged_cells:
+                cell = f"{c.get('arch')}@conc{c.get('concurrency')}"
+                if sb.get("require_bitexact") and not c.get("bitexact_vs_dense"):
+                    print(f"  FAIL serve bench {cell}: paged tokens diverge "
+                          f"from the dense engine on the identity cache "
+                          f"dtype ({c.get('cache_dtype')})")
+                    failed, n_bad = True, n_bad + 1
+                hw, de = c.get("high_water_bytes"), c.get("dense_equiv_bytes")
+                if hw is not None and de and hw > de * ratio:
+                    print(f"  FAIL serve bench {cell}: paged high-water "
+                          f"{hw:.0f} B exceeds {ratio:.2f}x the "
+                          f"dense-equivalent {de:.0f} B")
+                    failed, n_bad = True, n_bad + 1
+            if paged_cells and not n_bad:
+                print(f"[bench] serve: {len(paged_cells)} paged cell(s) "
+                      f"bit-exact, high-water <= {ratio:.2f}x dense")
+
     if args.write_baseline:
         audit_summary = None
         if audit_report is not None:

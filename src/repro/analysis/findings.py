@@ -71,6 +71,10 @@ class Baseline:
     # BENCH_pipeline.json must keep the compressed 1F1B activation ring
     # below this (repro.analysis --check fails otherwise)
     pipeline_bench: dict = field(default_factory=dict)
+    # serve-bench gates: every paged cell in the committed BENCH_serve.json
+    # must be bit-exact vs its dense twin and keep its pool high-water at or
+    # below the dense-equivalent bytes (times max_paged_over_dense_ratio)
+    serve_bench: dict = field(default_factory=dict)
 
     def accepts(self, f: Finding) -> bool:
         return f.fingerprint in self.entries
@@ -91,6 +95,7 @@ def load_baseline(path: Optional[str] = None) -> Baseline:
         entries=entries,
         audit=raw.get("audit", {}),
         pipeline_bench=raw.get("pipeline_bench", {}),
+        serve_bench=raw.get("serve_bench", {}),
     )
 
 
@@ -128,6 +133,7 @@ def write_baseline(
         "findings": rows,
         "audit": audit if audit is not None else prev.audit,
         "pipeline_bench": prev.pipeline_bench,
+        "serve_bench": prev.serve_bench,
     }
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=1, sort_keys=True)

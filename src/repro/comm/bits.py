@@ -165,6 +165,25 @@ def activation_payload_bits(
     return float(nb * kb * (vb + ib))
 
 
+def kv_cache_bits_per_token(
+    n_paged_layers: int,
+    n_kv_heads: int,
+    head_dim: int,
+    cache_dtype: str,
+    pos_bits: int = 32,
+) -> float:
+    """Stored bits per token slot across the serve engine's paged KV pools.
+
+    One token slot holds a K row and a V row (n_kv_heads * head_dim values
+    each) at the cache codec's wire dtype, plus one ``pos_bits`` position
+    entry, per paged (global-attention) layer. The serve-side analogue of
+    ``activation_payload_bits``: the single formula shared by the paged
+    cache writes (``serve.paged_cache``), the engine's per-token cache-byte
+    counters and BENCH_serve.json."""
+    vb = dtype_bits(cache_dtype)
+    return float(n_paged_layers) * (2.0 * n_kv_heads * head_dim * vb + pos_bits)
+
+
 def account(
     cfg,
     template: Tree,

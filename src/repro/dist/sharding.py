@@ -183,7 +183,11 @@ def cache_specs(cache, mesh, data_axis: Axis, tp_axis: Axis):
 
     Handles both the scan-over-units stacked layout (leading n_units dim
     under the "unit" subtree) and flat per-layer ("rem") states. Ring-buffer
-    position tables ("pos") are tiny and stay replicated.
+    position tables ("pos"/"ppos") and block tables ("bt") are tiny and stay
+    replicated. Paged block pools ("pk"/"pv", shape (num_blocks, block,
+    Hkv, Dh)) shard the pool dim over data — capacity scales with devices;
+    block gathers cross shards, which XLA lowers to collectives — and keep
+    the head dim over tp like dense k/v.
     """
 
     def leaf(path, x):
@@ -192,12 +196,12 @@ def cache_specs(cache, mesh, data_axis: Axis, tp_axis: Axis):
         shape = tuple(x.shape)
         ndim = len(shape)
         b = 1 if "unit" in keys else 0  # stacked leading layer axis
-        if key == "pos" or ndim <= b + 1:
+        if key in ("pos", "ppos", "bt") or ndim <= b + 1:
             return P()
         entries = [None] * ndim
         entries[b] = _fit(mesh, shape[b], data_axis)
-        if key in ("k", "v") and ndim - b >= 3:
-            entries[-2] = _fit(mesh, shape[-2], tp_axis)  # (B, S, H, Dh) heads
+        if key in ("k", "v", "pk", "pv") and ndim - b >= 3:
+            entries[-2] = _fit(mesh, shape[-2], tp_axis)  # (.., H, Dh) heads
         return P(*entries)
 
     return jax.tree_util.tree_map_with_path(leaf, cache)

@@ -65,7 +65,9 @@ def decode_specs(cfg: ModelConfig, shape: ShapeConfig, init_cache) -> tuple:
     b, s = shape.global_batch, shape.seq_len
     cache_shape = jax.eval_shape(lambda: init_cache(b, s))
     tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
-    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    # per-slot positions: the continuous-batching engine decodes every slot
+    # at its own offset (-1 freezes a slot), so the lowered unit matches
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
     return cache_shape, tokens, pos
 
 

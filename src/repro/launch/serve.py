@@ -18,6 +18,13 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--mesh-shape", default="4,2")
+    ap.add_argument("--dense", action="store_true",
+                    help="dense per-slot KV cache (default: paged when the "
+                         "arch has global-attention layers)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--cache-dtype", default=None,
+                    help="paged-block wire dtype (default: compute dtype, "
+                         "bit-exact)")
     args = ap.parse_args(argv)
 
     shape = tuple(int(x) for x in args.mesh_shape.split(","))
@@ -47,23 +54,28 @@ def main(argv=None):
     params = jax.jit(model.init, out_shardings=serve.param_shardings)(
         jax.random.PRNGKey(0)
     )
-    srv = BatchedServer(serve, params, cfg, args.batch, args.max_seq)
+    paged = False if args.dense else None  # None = auto (paged when pageable)
+    srv = BatchedServer(serve, params, cfg, args.batch, args.max_seq,
+                        paged=paged, block_size=args.block_size,
+                        cache_dtype=args.cache_dtype)
     rng = np.random.default_rng(0)
-    pending = [
-        Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, size=6).astype(np.int32),
-                max_new_tokens=args.max_new)
-        for i in range(args.requests)
-    ]
-    t0, ticks = time.time(), 0
-    while pending or any(s is not None for s in srv.slots):
-        while pending and srv.submit(pending[0]):
-            pending.pop(0)
-        srv.tick()
-        ticks += 1
+    for i in range(args.requests):
+        srv.submit(Request(
+            uid=i, prompt=rng.integers(0, cfg.vocab_size, size=6).astype(np.int32),
+            max_new_tokens=args.max_new,
+        ))
+    t0 = time.time()
+    done, pending = srv.drain(strict=True)
     dt = time.time() - t0
-    done = len(srv.completed)
-    print(f"[serve] {done} requests, {ticks} engine ticks, "
-          f"{done * args.max_new / dt:.1f} tok/s (CPU, {ndev} fake devices)")
+    stats = srv.cache_stats()
+    mode = "paged" if srv.paged else "dense"
+    print(f"[serve] {len(done)} requests, {stats['ticks']} engine ticks "
+          f"({mode} cache, {stats['cache_dtype']}), "
+          f"{stats['decode_tokens'] / dt:.1f} tok/s (CPU, {ndev} fake devices)")
+    if srv.paged:
+        print(f"[serve] block high-water {stats['block_high_water']}"
+              f"/{stats['num_blocks']}: {stats['high_water_bytes']:.0f} B "
+              f"vs dense-equivalent {stats['dense_equiv_bytes']:.0f} B")
     return 0
 
 

@@ -113,8 +113,7 @@ def decode(
         lp, lxkv, lcache = inp
         h = L.rmsnorm(lp["norm1"], x, cfg.norm_eps)
         out, ns = L.attention_apply(
-            lp["attn"], cfg, h, positions, kind="global",
-            cache=lcache, cache_pos=cache_pos,
+            lp["attn"], cfg, h, positions, kind="global", cache=lcache,
         )
         x = x + out
         h = L.rmsnorm(lp["norm_x"], x, cfg.norm_eps)
@@ -148,5 +147,5 @@ def encdec_init_cache(cfg: ModelConfig, batch: int, max_seq: int):
     return {
         "k": jnp.zeros(shape, dt),
         "v": jnp.zeros(shape, dt),
-        "pos": jnp.full((cfg.n_layers, max_seq), -1, jnp.int32),
+        "pos": jnp.full((cfg.n_layers, batch, max_seq), -1, jnp.int32),
     }

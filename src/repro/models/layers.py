@@ -168,18 +168,64 @@ def _chunked_softmax_attend(
     return out.transpose(0, 3, 1, 2, 4)  # (B, Sq, Hkv, G, Dh)
 
 
+def _attend_masked(
+    qg: jax.Array,       # (B, Sq, Hkv, G, Dh) scaled queries
+    k: jax.Array,        # (B, Skv, Hkv, Dh)
+    v: jax.Array,        # (B, Skv, Hkv, Dh)
+    q_pos: jax.Array,    # (B, Sq) absolute query positions
+    kv_pos: jax.Array,   # (B, Skv) absolute key positions, -1 = empty slot
+    window: int,         # 0 = unbounded
+) -> jax.Array:
+    """Single-block flash-form attention with explicit position masks.
+
+    The one-chunk specialization of `_chunked_softmax_attend`: same m/l/acc
+    max-subtraction algebra, so a decode chain over a cache reproduces the
+    full-sequence forward *bitwise* for attention archs (the serve parity
+    contract, tests/test_serve_engine.py). Fully-masked rows (frozen slots,
+    q_pos < 0) come out finite, never NaN."""
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    mask = (kv_pos[:, None, :] <= q_pos[:, :, None]) & (kv_pos[:, None, :] >= 0)
+    if window:
+        mask = mask & (kv_pos[:, None, :] > q_pos[:, :, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    acc = jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4)  # (B, Sq, Hkv, G, Dh)
+
+
 def attention_apply(
     params: Params,
     cfg: ModelConfig,
     x: jax.Array,                      # (B, S, d)
-    positions: jax.Array,              # (S,) absolute positions
+    positions: jax.Array,              # (S,) or (B, S) absolute positions
     kind: str = "global",              # "global" | "swa" | "local"
-    cache: Optional[dict] = None,      # decode: {"k","v"} (B, Smax, Hkv, Dh)
-    cache_pos=None,                    # decode: scalar write position
+    cache: Optional[dict] = None,      # decode: see below
     cross_kv: Optional[tuple] = None,  # encdec cross-attn: (k, v) precomputed
     causal: bool = True,
     kv_chunk: int = 1024,
+    block_table: Optional[jax.Array] = None,  # paged cache: (B, nb) block ids
 ):
+    """Attention with an optional decode cache.
+
+    Cache forms (DESIGN.md §9):
+      - dense: {"k","v"} (B, L, Hkv, Dh) + "pos" (B, L) absolute positions
+        (-1 = empty). Writes scatter each token at its absolute position
+        (mod L for the windowed ring buffers).
+      - paged: {"pk","pv"} (NB, block, Hkv, Dh) + "ppos" (NB, block), read
+        and written through ``block_table`` (B, nb; -1 = unassigned block).
+    ``positions`` may be per-batch (B, S); rows with negative positions are
+    frozen slots — their cache writes are dropped (OOB scatter indices) and
+    their outputs are garbage-but-finite, to be discarded by the caller.
+    """
     b, s, d = x.shape
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     dt = _dtype(cfg)
@@ -198,50 +244,77 @@ def attention_apply(
         k, v = cross_kv
 
     new_cache = None
-    prefill = cache is not None and cross_kv is None and s > 1
+    incremental = False
+    kv_pos = None
     if cache is not None and cross_kv is None:
-        cache_len = cache["k"].shape[1]
-        if prefill and s >= cache_len:
-            # prefill into a bounded (ring) cache: keep only the last
-            # cache_len keys/values; attention below runs on the full seq
-            ck = k[:, s - cache_len:].astype(cache["k"].dtype)
-            cv = v[:, s - cache_len:].astype(cache["v"].dtype)
-            cp = positions[s - cache_len:].astype(cache["pos"].dtype)
-            new_cache = {"k": ck, "v": cv, "pos": cp}
+        paged = "pk" in cache
+        pos2d = (
+            positions if positions.ndim == 2
+            else jnp.broadcast_to(positions[None], (b, s))
+        ).astype(jnp.int32)
+        if paged:
+            # paged cache: scatter fresh K/V into the block pool through the
+            # block table, then gather the per-sequence view back. Rows with
+            # pos < 0 (frozen slots) and -1 table entries map to an OOB block
+            # id and are dropped; negative ids would WRAP in jax indexing.
+            incremental = True
+            nb_pool, bs_blk = cache["ppos"].shape
+            nb_seq = block_table.shape[1]
+            blk_idx = jnp.clip(jnp.where(pos2d >= 0, pos2d // bs_blk, 0),
+                               0, nb_seq - 1)
+            blk = jnp.take_along_axis(block_table, blk_idx, axis=1)  # (B, S)
+            blk = jnp.where((pos2d >= 0) & (blk >= 0), blk, nb_pool)
+            off = jnp.where(pos2d >= 0, pos2d % bs_blk, 0)
+            pk = cache["pk"].at[blk, off].set(
+                k.astype(cache["pk"].dtype), mode="drop")
+            pv = cache["pv"].at[blk, off].set(
+                v.astype(cache["pv"].dtype), mode="drop")
+            pp = cache["ppos"].at[blk, off].set(pos2d, mode="drop")
+            new_cache = {"pk": pk, "pv": pv, "ppos": pp}
+            # gather: mode="fill" treats -1 table entries as OOB (no wrap),
+            # so unassigned blocks read as zeros with pos = -1 (masked out)
+            k = jnp.take(pk, block_table, axis=0, mode="fill",
+                         fill_value=0).reshape(b, nb_seq * bs_blk, hkv, dh)
+            v = jnp.take(pv, block_table, axis=0, mode="fill",
+                         fill_value=0).reshape(b, nb_seq * bs_blk, hkv, dh)
+            kv_pos = jnp.take(pp, block_table, axis=0, mode="fill",
+                              fill_value=-1).reshape(b, nb_seq * bs_blk)
         else:
-            # decode (or prefill that fits): write at cache_pos with absolute
-            # positions — windowed caches are ring buffers, slot != time
-            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
-            cp = jax.lax.dynamic_update_slice(
-                cache["pos"], positions.astype(cache["pos"].dtype), (cache_pos,)
-            )
-            new_cache = {"k": ck, "v": cv, "pos": cp}
-            if not prefill:
-                k, v = ck, cv
+            cache_len = cache["k"].shape[1]
+            if s > 1 and s >= cache_len:
+                # prefill into a bounded (ring) cache: keep only the last
+                # cache_len keys/values; attention below runs on the full seq
+                ck = k[:, s - cache_len:].astype(cache["k"].dtype)
+                cv = v[:, s - cache_len:].astype(cache["v"].dtype)
+                cp = pos2d[:, s - cache_len:]
+                new_cache = {"k": ck, "v": cv, "pos": cp}
+            else:
+                # incremental write (decode tick or chunked-prefill
+                # continuation): scatter each token at its absolute position
+                # — windowed caches are ring buffers, slot != time
+                incremental = True
+                slot = jnp.where(pos2d >= 0, pos2d % cache_len, cache_len)
+                bidx = jnp.arange(b)[:, None]
+                ck = cache["k"].at[bidx, slot].set(
+                    k.astype(cache["k"].dtype), mode="drop")
+                cv = cache["v"].at[bidx, slot].set(
+                    v.astype(cache["v"].dtype), mode="drop")
+                cp = cache["pos"].at[bidx, slot].set(pos2d, mode="drop")
+                new_cache = {"k": ck, "v": cv, "pos": cp}
+                k, v, kv_pos = ck, cv, cp
 
     qg = _gqa_expand(q, hkv) * (1.0 / math.sqrt(dh))
     window = cfg.window if kind in ("swa", "local") else 0
 
-    if cache is not None and cross_kv is None and not prefill:
-        # decode path: q_len small; single pass with position mask
-        kv_pos = new_cache["pos"]  # (Skv,) absolute positions, -1 = empty
-        sNumer = jnp.einsum(
-            "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32),
-            preferred_element_type=jnp.float32,
-        )
-        q_pos = positions  # absolute positions of queries
-        mask = (kv_pos[None, :] <= q_pos[:, None]) & (kv_pos[None, :] >= 0)
-        if window:
-            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
-        sNumer = jnp.where(mask[None, None, None], sNumer, NEG_INF)
-        p = jax.nn.softmax(sNumer, axis=-1)
-        out = jnp.einsum(
-            "bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32),
-            preferred_element_type=jnp.float32,
-        )
+    if incremental:
+        # decode / continuation path: attend over the updated cache with
+        # explicit position masks (per-slot positions under the serve engine)
+        out = _attend_masked(qg, k, v, pos2d, kv_pos, window)
     else:
-        q_off = positions[0] if cross_kv is None else 0
+        if cross_kv is not None:
+            q_off = 0
+        else:
+            q_off = positions[0] if positions.ndim == 1 else positions[0, 0]
         out = _chunked_softmax_attend(
             qg.astype(jnp.float32), k, v, q_off,
             causal=causal and cross_kv is None, window=window, kv_chunk=kv_chunk,

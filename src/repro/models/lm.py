@@ -59,7 +59,9 @@ def _layer_state_init(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
         return {
             "k": jnp.zeros(shape, dt),
             "v": jnp.zeros(shape, dt),
-            "pos": jnp.full((cache_len,), -1, jnp.int32),
+            # per-slot position table: slots in a continuous-batching engine
+            # advance independently (DESIGN.md §9)
+            "pos": jnp.full((batch, cache_len), -1, jnp.int32),
         }
     if kind == "rglru":
         return R.rglru_init_state(cfg, batch)
@@ -75,17 +77,13 @@ def _layer_apply(
     x: jax.Array,
     positions: jax.Array,
     state=None,
-    cache_pos=None,
+    block_table=None,
 ):
     h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
     if kind in ("global", "swa", "local"):
-        # windowed caches: write position is modulo the cache length
-        cpos = cache_pos
-        if state is not None and kind in ("swa", "local"):
-            cpos = cache_pos % state["k"].shape[1]
         out, new_state = L.attention_apply(
             params["attn"], cfg, h, positions, kind=kind,
-            cache=state, cache_pos=cpos,
+            cache=state, block_table=block_table,
         )
     elif kind == "rglru":
         out, new_state = R.rglru_block_apply(params["rglru"], cfg, h, state)
@@ -154,7 +152,56 @@ def lm_init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Any:
     return {"unit": unit, "rem": remst}
 
 
-def _stack_body(cfg: ModelConfig, positions, cache_pos, remat: str):
+def lm_init_paged_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_seq: int,
+    num_blocks: int,
+    block_size: int,
+    cache_dtype=None,
+) -> Any:
+    """Paged decode cache (DESIGN.md §9).
+
+    Global-attention layers store K/V in a block pool of ``num_blocks``
+    fixed-size blocks — (num_blocks, block_size, Hkv, Dh) per layer —
+    addressed through ONE per-sequence block table ``"bt"`` (batch,
+    max_seq // block_size; -1 = unassigned): token t of slot b lives at
+    block ``bt[b, t // block_size]``, offset ``t % block_size``, in every
+    layer's own pool. Capacity is bounded by tokens in flight (num_blocks *
+    block_size), not batch * max_seq. Windowed ring buffers and recurrent
+    states are already O(1)-bounded per slot and stay dense. ``cache_dtype``
+    is the on-write quantization dtype (the serve cache codec's wire dtype);
+    None keeps the compute dtype (identity, bit-exact vs dense).
+    """
+    assert max_seq % block_size == 0, (max_seq, block_size)
+    u, n_units, rem = _unit_layout(cfg)
+    dt = jnp.dtype(cache_dtype) if cache_dtype else jnp.dtype(cfg.compute_dtype)
+
+    def st(kind):
+        if kind == "global":
+            shape = (num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+            return {
+                "pk": jnp.zeros(shape, dt),
+                "pv": jnp.zeros(shape, dt),
+                "ppos": jnp.full((num_blocks, block_size), -1, jnp.int32),
+            }
+        return _layer_state_init(cfg, kind, batch, max_seq)
+
+    unit = []
+    for j in range(u):
+        s0 = st(cfg.attn_pattern[j])
+        unit.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_units,) + x.shape), s0
+        ))
+    remst = [st(cfg.attn_pattern[j]) for j in range(rem)]
+    return {
+        "unit": unit,
+        "rem": remst,
+        "bt": jnp.full((batch, max_seq // block_size), -1, jnp.int32),
+    }
+
+
+def _stack_body(cfg: ModelConfig, positions, remat: str, block_table=None):
     u = len(cfg.attn_pattern)
 
     def unit_body(x, unit_params, unit_state):
@@ -162,7 +209,8 @@ def _stack_body(cfg: ModelConfig, positions, cache_pos, remat: str):
         for j in range(u):
             st = None if unit_state is None else unit_state[j]
             x, ns = _layer_apply(
-                unit_params[j], cfg, cfg.attn_pattern[j], x, positions, st, cache_pos
+                unit_params[j], cfg, cfg.attn_pattern[j], x, positions, st,
+                block_table,
             )
             new_states.append(ns)
         return x, new_states
@@ -183,19 +231,36 @@ def lm_forward(
     tokens: jax.Array,                   # (B, S)
     prefix_embeds: Optional[jax.Array] = None,  # VLM stub: (B, Np, d)
     cache: Optional[Any] = None,
-    cache_pos=None,                      # decode write position (scalar)
+    cache_pos=None,                      # decode write position: scalar or (B,)
     remat: str = "none",
     return_hidden: bool = False,
 ):
-    """Returns (logits-or-hidden, new_cache_or_None)."""
+    """Returns (logits-or-hidden, new_cache_or_None).
+
+    ``cache_pos`` may be a per-slot (B,) vector (continuous batching): each
+    row's tokens then sit at positions ``cache_pos[b] + arange(S)``; rows
+    with ``cache_pos[b] < 0`` are frozen (cache writes dropped, outputs to
+    be discarded by the caller). A paged cache carries its block table under
+    a top-level ``"bt"`` key and is threaded to the attention layers here.
+    """
+    block_table = cache.get("bt") if isinstance(cache, dict) else None
     x = L.embed_apply(params, cfg, tokens)
     if prefix_embeds is not None:
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
     seq = x.shape[1]
-    pos0 = 0 if cache_pos is None else cache_pos
-    positions = pos0 + jnp.arange(seq)
+    if cache_pos is None:
+        positions = jnp.arange(seq)
+    else:
+        cp = jnp.asarray(cache_pos)
+        if cp.ndim:
+            # frozen rows (cp < 0): push far negative so every per-token
+            # position cp + t stays negative, not just the first
+            cp = jnp.where(cp < 0, jnp.int32(-(2 ** 30)), cp)
+            positions = cp[:, None] + jnp.arange(seq)
+        else:
+            positions = cp + jnp.arange(seq)
 
-    body = _stack_body(cfg, positions, cache_pos, remat)
+    body = _stack_body(cfg, positions, remat, block_table)
     u, n_units, rem = _unit_layout(cfg)
 
     if n_units > 0:
@@ -221,7 +286,8 @@ def lm_forward(
     for j in range(rem):
         st = None if cache is None else cache["rem"][j]
         x, ns = _layer_apply(
-            params["rem"][j], cfg, cfg.attn_pattern[j], x, positions, st, cache_pos
+            params["rem"][j], cfg, cfg.attn_pattern[j], x, positions, st,
+            block_table,
         )
         new_rem.append(ns)
 
@@ -229,6 +295,8 @@ def lm_forward(
     new_cache = None
     if cache is not None:
         new_cache = {"unit": new_unit_cache, "rem": new_rem}
+        if block_table is not None:
+            new_cache["bt"] = block_table
     if return_hidden:
         return x, new_cache
     if cfg.tie_embeddings:

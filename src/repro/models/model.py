@@ -61,6 +61,10 @@ class Model(NamedTuple):
     decode_step: Optional[Callable]                    # (params, cache, tokens, pos) -> (logits, cache)
     init_cache: Optional[Callable]                     # (batch, max_seq) -> cache
     pipeline: Optional[PipelineDef] = None             # stage decomposition (or None)
+    # paged decode cache (batch, max_seq, num_blocks, block_size,
+    # cache_dtype) -> cache with a "bt" block table; None when the arch has
+    # no global-attention layers to page (DESIGN.md §9)
+    init_paged_cache: Optional[Callable] = None
 
 
 def chunked_ce(
@@ -183,8 +187,17 @@ def _build_lm(cfg: ModelConfig, remat: str) -> Model:
     def init_cache(batch, max_seq):
         return LM.lm_init_cache(cfg, batch, max_seq)
 
+    def init_paged_cache(batch, max_seq, num_blocks, block_size,
+                         cache_dtype=None):
+        return LM.lm_init_paged_cache(
+            cfg, batch, max_seq, num_blocks, block_size, cache_dtype
+        )
+
     return Model(cfg, init, loss_fn, prefill, decode_step, init_cache,
-                 pipeline=_lm_pipeline(cfg, remat))
+                 pipeline=_lm_pipeline(cfg, remat),
+                 init_paged_cache=(
+                     init_paged_cache if "global" in cfg.attn_pattern else None
+                 ))
 
 
 # ---------------------------------------------------------------------------

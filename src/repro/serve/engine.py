@@ -1,15 +1,27 @@
-"""Serving engine: prefill + batched decode steps.
+"""Serving engine: continuous batching over ``decode_step``.
 
 Serving uses no SASG (inference has no gradient traffic); params are FSDP x
-TP sharded like training so multi-hundred-GB models fit. `decode_step` is the
-unit the decode_32k / long_500k dry-run shapes lower: one new token per
-sequence against a seq_len KV cache (or O(1) recurrent state for SSM/RG-LRU
-archs — that is exactly what makes long_500k runnable for them).
+TP sharded like training so multi-hundred-GB models fit. ``decode_step`` is
+the unit the decode_32k / long_500k dry-run shapes lower: a (B, W) token
+chunk per tick against per-slot KV caches (or O(1) recurrent state for
+SSM/RG-LRU archs — that is exactly what makes long_500k runnable for them).
+
+:class:`BatchedServer` runs the vLLM-style loop on top (DESIGN.md §9):
+a FIFO request queue with admission control, a :class:`~repro.serve.
+scheduler.Scheduler` driving per-slot positions through chunked prefill
+interleaved with decode ticks, slot recycling that resets the recycled
+rows (per-slot ``pos`` tables make a recycled slot's old cache unreachable
+— the shared-global-``pos`` server this replaces read the previous
+occupant's cache), and an optional paged KV cache (``serve.paged_cache``)
+whose blocks are quantized on write at an ``ActivationLayout`` wire dtype.
+
+One jitted tick function per width, compiled once and reused (the old
+server re-wrapped ``jax.jit`` every tick and re-traced each call); the
+cache is donated through it.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,14 +32,29 @@ from repro.configs.base import ModelConfig
 from repro.dist.sharding import cache_specs, param_specs
 from repro.models.model import Model
 
+from .paged_cache import (
+    BlockAllocator,
+    cache_bytes,
+    cache_layout,
+    paged_bits_per_token,
+    release_blocks,
+    reset_slots,
+    select_slots,
+)
+from .scheduler import PREFILL, Request, Scheduler
+
+__all__ = ["BatchedServer", "BuiltServe", "Request", "build_serve"]
+
 
 class BuiltServe(NamedTuple):
     prefill: Callable            # (params, batch) -> (logits, cache)
     decode_step: Callable        # pure: (params, cache, tokens, pos) -> (logits, cache)
-    jit_decode: Callable
     init_cache: Callable
     param_shardings: Any
     cache_sharding_fn: Callable
+    init_paged_cache: Optional[Callable] = None
+    mesh: Any = None
+    dp: Any = None
 
 
 def build_serve(model: Model, mesh, fsdp: Optional[str], tp: Optional[str],
@@ -46,99 +73,228 @@ def build_serve(model: Model, mesh, fsdp: Optional[str], tp: Optional[str],
     def decode_step(params, cache, tokens, pos):
         return model.decode_step(params, cache, tokens, pos)
 
-    def jit_decode(params, cache, tokens, pos):
-        fn = jax.jit(
-            decode_step,
-            in_shardings=(
-                param_shardings,
-                cache_sharding_fn(cache),
-                NamedSharding(mesh, P(dp, None)),
-                NamedSharding(mesh, P()),
-            ),
-            donate_argnums=(1,),
-        )
-        return fn(params, cache, tokens, pos)
-
     return BuiltServe(
         prefill=model.prefill,
         decode_step=decode_step,
-        jit_decode=jit_decode,
         init_cache=model.init_cache,
         param_shardings=param_shardings,
         cache_sharding_fn=cache_sharding_fn,
+        init_paged_cache=model.init_paged_cache,
+        mesh=mesh,
+        dp=dp,
     )
 
 
-@dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray            # (S,) int32
-    max_new_tokens: int = 16
+def _allowed_widths(cfg: ModelConfig, prefill_chunk: int) -> Tuple[int, ...]:
+    """Tick widths the arch can execute: prefill_chunk halved down to 1.
+    SSD archs additionally require every multi-token width to be a multiple
+    of the SSD scan chunk (``ssd_chunked`` asserts seq % chunk == 0)."""
+    ws = set()
+    w = max(1, int(prefill_chunk))
+    while w >= 1:
+        ws.add(w)
+        w //= 2
+    if "ssd" in cfg.attn_pattern:
+        c = cfg.ssm.chunk_size
+        ws = {w for w in ws if w == 1 or w % c == 0}
+    return tuple(sorted(ws, reverse=True))
 
 
 class BatchedServer:
-    """Minimal continuous-batching loop over a fixed decode batch size.
+    """Continuous-batching server over a fixed decode batch size.
 
-    Requests join free slots; every engine tick decodes one token for every
-    active slot. Greedy sampling (argmax) — the engine is about the systems
-    path, not sampling strategy."""
+    Greedy sampling (argmax) — the engine is about the systems path, not
+    sampling strategy. ``paged=None`` auto-enables the paged KV cache when
+    the model has global-attention layers to page (``cache_dtype`` then
+    selects the block wire dtype; ``None`` = compute dtype, bit-exact)."""
 
     def __init__(self, serve: BuiltServe, params, cfg: ModelConfig,
-                 batch_size: int, max_seq: int):
+                 batch_size: int, max_seq: int, *,
+                 paged: Optional[bool] = None, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 cache_dtype: Optional[str] = None,
+                 prefill_chunk: int = 8, max_queue: Optional[int] = None):
         self.serve = serve
         self.params = params
         self.cfg = cfg
         self.batch = batch_size
         self.max_seq = max_seq
-        self.cache = serve.init_cache(batch_size, max_seq)
-        self.pos = jnp.zeros((), jnp.int32)
-        self.slots: list[Optional[dict]] = [None] * batch_size
-        self.completed: list[dict] = []
+        self.max_queue = max_queue
+        if paged is None:
+            paged = serve.init_paged_cache is not None
+        if paged and serve.init_paged_cache is None:
+            raise ValueError(
+                f"{cfg.name}: no global-attention layers to page"
+            )
+        self.paged = paged
+        self.layout = cache_layout(cfg, cache_dtype if paged else None)
+
+        if paged:
+            if max_seq % block_size != 0:
+                raise ValueError(f"max_seq {max_seq} % block_size {block_size}")
+            self._nb_seq = max_seq // block_size
+            if num_blocks is None:
+                num_blocks = batch_size * self._nb_seq  # dense-equivalent pool
+            self.allocator: Optional[BlockAllocator] = BlockAllocator(
+                num_blocks, block_size
+            )
+            self.cache = serve.init_paged_cache(
+                batch_size, max_seq, num_blocks, block_size,
+                cache_dtype=self.layout.wire_dtype,
+            )
+            self._bt = np.full((batch_size, self._nb_seq), -1, np.int32)
+            self.cache["bt"] = jnp.asarray(self._bt)
+        else:
+            self.allocator = None
+            self.cache = serve.init_cache(batch_size, max_seq)
+
+        self.scheduler = Scheduler(
+            batch_size, max_seq,
+            widths=_allowed_widths(cfg, prefill_chunk),
+            allocator=self.allocator,
+        )
+        self.completed: List[dict] = []
+        self.stats = {
+            "ticks": 0, "prefill_tokens": 0, "decode_tokens": 0,
+            "cache_bytes": cache_bytes(self.cache),
+        }
+
+        # one compiled tick per width; cache donated through each
+        self._cache_shardings = serve.cache_sharding_fn(self.cache)
+        mesh, dp = serve.mesh, serve.dp
+        dsize = 1
+        if mesh is not None and dp is not None:
+            dsize = np.prod([mesh.shape[a] for a in (
+                dp if isinstance(dp, (tuple, list)) else (dp,))])
+        tok_spec = P(dp, None) if dsize > 1 and batch_size % dsize == 0 else P()
+        self._tok_sharding = (
+            NamedSharding(mesh, tok_spec) if mesh is not None else None
+        )
+        self._pos_sharding = (
+            NamedSharding(mesh, P()) if mesh is not None else None
+        )
+        self._ticks: dict[int, Callable] = {}
+
+        def _tick(params, cache, tokens, pos):
+            logits, nc = serve.decode_step(params, cache, tokens, pos)
+            return logits, select_slots(nc, cache, pos >= 0)
+
+        self._tick_impl = _tick
+
+    def _tick_fn(self, width: int) -> Callable:
+        fn = self._ticks.get(width)
+        if fn is None:
+            mesh = self.serve.mesh
+            logits_sharding = None
+            if mesh is not None:
+                logits_sharding = NamedSharding(
+                    mesh, P(*(tuple(self._tok_sharding.spec) + (None,)))
+                )
+            fn = jax.jit(
+                self._tick_impl,
+                in_shardings=(
+                    self.serve.param_shardings, self._cache_shardings,
+                    self._tok_sharding, self._pos_sharding,
+                ),
+                # pin outputs so tick N+1's committed cache matches
+                # in_shardings (GSPMD would otherwise pick its own layout)
+                out_shardings=(logits_sharding, self._cache_shardings),
+                donate_argnums=(1,),
+            )
+            self._ticks[width] = fn
+        return fn
+
+    # -- request lifecycle ---------------------------------------------
 
     def submit(self, req: Request) -> bool:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                self.slots[i] = {
-                    "req": req, "generated": [], "fed": 0,
-                }
-                return True
-        return False
+        """Queue a request. Raises ValueError when it can never fit
+        (prompt + max_new - 1 > max_seq); returns False when the queue is
+        at ``max_queue`` (backpressure), True otherwise."""
+        self.scheduler.validate(req)
+        if self.max_queue is not None and len(self.scheduler.queue) >= self.max_queue:
+            return False
+        self.scheduler.submit(req)
+        return True
 
-    def _next_tokens(self) -> np.ndarray:
-        toks = np.zeros((self.batch, 1), np.int32)
-        for i, s in enumerate(self.slots):
-            if s is None:
-                continue
-            req = s["req"]
-            if s["fed"] < len(req.prompt):
-                toks[i, 0] = req.prompt[s["fed"]]
-                s["fed"] += 1
-            elif s["generated"]:
-                toks[i, 0] = s["generated"][-1]
-        return toks
+    def _admit(self) -> None:
+        admitted = self.scheduler.admit()
+        if not admitted:
+            return
+        # recycle the slots: per-slot pos rows -> -1, recurrent rows -> 0,
+        # so the new occupant can never read the previous one's cache
+        mask = np.zeros((self.batch,), bool)
+        mask[admitted] = True
+        self.cache = reset_slots(self.cache, jnp.asarray(mask))
+        if self.paged:
+            for i in admitted:
+                self._bt[i] = -1
+                blocks = self.scheduler.slots[i].blocks
+                self._bt[i, : len(blocks)] = blocks
+            self.cache["bt"] = jnp.asarray(self._bt)
 
-    def tick(self):
-        toks = jnp.asarray(self._next_tokens())
-        logits, self.cache = self.serve.jit_decode(
-            self.params, self.cache, toks, self.pos
+    def tick(self) -> bool:
+        """One engine step: admit, plan, run, commit. False when idle."""
+        self._admit()
+        plan = self.scheduler.plan()
+        if plan is None:
+            return False
+        prompt_fed = sum(
+            plan.width for i in plan.active
+            if self.scheduler.slots[i].state == PREFILL
         )
-        self.pos = self.pos + 1
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        for i, s in enumerate(self.slots):
-            if s is None:
-                continue
-            req = s["req"]
-            if s["fed"] >= len(req.prompt):
-                s["generated"].append(int(nxt[i]))
-                if len(s["generated"]) >= req.max_new_tokens:
-                    self.completed.append(
-                        {"uid": req.uid, "tokens": list(s["generated"])}
-                    )
-                    self.slots[i] = None
+        logits, self.cache = self._tick_fn(plan.width)(
+            self.params, self.cache,
+            jnp.asarray(plan.tokens), jnp.asarray(plan.pos),
+        )
+        sampled = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        completions, freed = self.scheduler.apply(plan, sampled)
+        self.completed.extend(completions)
+        if freed:
+            # poison the freed blocks' position rows; bt rows are rewritten
+            # at the slot's next admission
+            self.allocator.free(freed)
+            self.cache = release_blocks(
+                self.cache, jnp.asarray(np.asarray(freed, np.int32))
+            )
+        self.stats["ticks"] += 1
+        self.stats["prefill_tokens"] += prompt_fed
+        self.stats["decode_tokens"] += len(plan.samplers)
+        return True
 
-    def drain(self, max_ticks: int = 10000):
+    def drain(
+        self, max_ticks: int = 10000, strict: bool = False
+    ) -> Tuple[List[dict], List[int]]:
+        """Run until idle or ``max_ticks``. Returns ``(completed, pending)``
+        where ``pending`` is the uids still in flight or queued — never a
+        silent truncation. ``strict=True`` raises instead when the tick
+        budget expires with work outstanding."""
         t = 0
-        while any(s is not None for s in self.slots) and t < max_ticks:
-            self.tick()
+        while self.scheduler.n_pending > 0 and t < max_ticks:
+            if not self.tick():
+                break
             t += 1
-        return self.completed
+        pending = self.scheduler.pending_uids()
+        if strict and pending:
+            raise RuntimeError(
+                f"drain: {len(pending)} requests unfinished after "
+                f"{max_ticks} ticks (uids {pending})"
+            )
+        return self.completed, pending
+
+    # -- accounting ----------------------------------------------------
+
+    def cache_stats(self) -> dict:
+        """Cache memory + wire accounting for BENCH_serve.json."""
+        out = dict(self.stats)
+        out["paged"] = self.paged
+        out["cache_dtype"] = self.layout.wire_dtype
+        if self.paged:
+            bits_tok = paged_bits_per_token(self.cfg, self.layout)
+            al = self.allocator
+            out["kv_bits_per_token"] = bits_tok
+            out["block_high_water"] = al.high_water
+            out["num_blocks"] = al.num_blocks
+            # bytes actually pinned at peak vs the dense-equivalent cache
+            out["high_water_bytes"] = al.high_water * al.block_size * bits_tok / 8
+            out["dense_equiv_bytes"] = self.batch * self.max_seq * bits_tok / 8
+        return out

@@ -1,0 +1,174 @@
+"""Paged KV cache plumbing for the continuous-batching serve engine.
+
+DESIGN.md §9. The cache itself is built by ``Model.init_paged_cache`` (block
+pools per global-attention layer + one per-sequence block table); this module
+owns everything around it:
+
+- :class:`BlockAllocator` — the host-side free list. Blocks are allocated
+  up front at admission (prompt + max_new tokens worth), so a request that
+  is admitted can never deadlock on blocks mid-flight, and the pool
+  high-water mark equals the tokens actually in flight.
+- the cache *codec*: cache blocks are quantized **on write** by storing the
+  pools at an :class:`~repro.comm.transport.ActivationLayout` wire dtype
+  (``k_ratio=0`` — a pure dtype cast, the same bit-reduction lever the
+  gradient exchange and the activation ring already use). The identity
+  layout (wire dtype == compute dtype) is bit-exact vs the dense cache;
+  narrower dtypes are gated by a parity-tolerance test.
+- jit-able slot lifecycle ops: :func:`select_slots` (commit only the active
+  slots of a tick), :func:`reset_slots` (recycle a slot for a new request),
+  :func:`release_blocks` (return freed blocks with their position rows
+  poisoned so a recycled block never exposes the previous occupant).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.bits import kv_cache_bits_per_token
+from repro.comm.transport import ActivationLayout
+from repro.configs.base import ModelConfig
+
+# leaves owned by the paged pools / block table: never batch-masked (their
+# frozen-slot writes were already dropped at the scatter via OOB indices)
+_POOL_KEYS = ("pk", "pv", "ppos", "bt")
+# recurrent per-slot states (RG-LRU / SSD rows) that must be zeroed on reuse
+_RECURRENT_KEYS = ("h", "conv")
+
+
+def cache_layout(cfg: ModelConfig, wire_dtype: Optional[str] = None) -> ActivationLayout:
+    """The cache write codec: an ActivationLayout with ``k_ratio=0``.
+
+    ``encode`` degenerates to the dtype cast the pool writes apply, so the
+    codec and the stored dtype cannot drift apart; ``payload_bits`` prices
+    the stored bytes. ``None`` selects the model compute dtype (identity)."""
+    wd = wire_dtype or str(jnp.dtype(cfg.compute_dtype))
+    return ActivationLayout(wire_dtype=wd, k_ratio=0.0)
+
+
+def paged_bits_per_token(cfg: ModelConfig, layout: ActivationLayout) -> float:
+    """Stored bits per token across this config's paged layers."""
+    n_paged = sum(
+        1 for i in range(cfg.n_layers)
+        if cfg.attn_pattern[i % len(cfg.attn_pattern)] == "global"
+    )
+    return kv_cache_bits_per_token(
+        n_paged, cfg.n_kv_heads, cfg.head_dim, layout.wire_dtype
+    )
+
+
+class BlockAllocator:
+    """Host-side free-list allocator over a fixed pool of cache blocks.
+
+    Block ids index every paged layer's pool identically (one table, N
+    pools). Tracks the pool high-water mark for the memory claims in
+    BENCH_serve.json."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free = list(range(num_blocks - 1, -1, -1))  # pop() -> low ids first
+        self.high_water = 0
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def can_allocate(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    def allocate(self, n: int) -> List[int]:
+        if not self.can_allocate(n):
+            raise RuntimeError(
+                f"paged cache exhausted: want {n} blocks, {len(self._free)} free"
+            )
+        ids = [self._free.pop() for _ in range(n)]
+        self.high_water = max(self.high_water, self.used_blocks)
+        return ids
+
+    def free(self, ids: List[int]) -> None:
+        for i in ids:
+            assert 0 <= i < self.num_blocks and i not in self._free, i
+            self._free.append(i)
+
+
+def _keys_of(path) -> list:
+    return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+
+
+def _batch_axis(keys: list) -> int:
+    # stacked leading layer dims: "unit" (LM scan) / "self"/"xkv" (encdec)
+    return 1 if any(k in ("unit", "self", "xkv") for k in keys) else 0
+
+
+def select_slots(new_cache, old_cache, active: jax.Array):
+    """Per-slot tick commit: recurrent-state rows of ``new_cache`` where
+    ``active``, the old rows otherwise. KV leaves (dense rings, pools, pos
+    tables) pass through unchanged — frozen slots never reached them, their
+    scatters were dropped at OOB indices — but RG-LRU/SSD states update
+    unconditionally inside the forward, so a frozen slot's padding tokens
+    would corrupt its recurrence without this select."""
+
+    def leaf(path, n, o):
+        keys = _keys_of(path)
+        if keys[-1] not in _RECURRENT_KEYS:
+            return n
+        ax = _batch_axis(keys)
+        m = active.reshape((1,) * ax + active.shape + (1,) * (n.ndim - ax - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree_util.tree_map_with_path(leaf, new_cache, old_cache)
+
+
+def reset_slots(cache, mask: jax.Array):
+    """Recycle slots for new occupants: position rows -> -1 (no stale reads
+    — the shared-global-pos regression this engine exists to fix), recurrent
+    rows -> 0 (a fresh sequence start). Dense K/V values become unreachable
+    once their positions are negative and need no zeroing."""
+
+    def leaf(path, x):
+        keys = _keys_of(path)
+        key = keys[-1]
+        if key in _POOL_KEYS:
+            return x
+        ax = _batch_axis(keys)
+        m = mask.reshape((1,) * ax + mask.shape + (1,) * (x.ndim - ax - 1))
+        if key == "pos":
+            return jnp.where(m, jnp.full_like(x, -1), x)
+        if key in _RECURRENT_KEYS:
+            return jnp.where(m, jnp.zeros_like(x), x)
+        return x
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def release_blocks(cache, block_ids: jax.Array):
+    """Poison the position rows of freed blocks (``block_ids`` padded with
+    OOB ids) so a recycled block never exposes the previous sequence's
+    positions. Values may remain in the pool: they are unreachable once
+    ``ppos < 0`` and are overwritten before the positions go live again."""
+
+    def leaf(path, x):
+        if _keys_of(path)[-1] == "ppos":
+            # stacked (n_units, NB, bs) or flat (NB, bs): poison on the NB dim
+            if x.ndim == 3:
+                return x.at[:, block_ids].set(-1, mode="drop")
+            return x.at[block_ids].set(-1, mode="drop")
+        return x
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def cache_bytes(cache) -> int:
+    """Total device bytes held by a decode cache tree."""
+    return sum(
+        x.size * jnp.dtype(x.dtype).itemsize for x in jax.tree.leaves(cache)
+    )

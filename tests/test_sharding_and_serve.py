@@ -106,11 +106,9 @@ def test_serve_engine_batched_requests(mesh2d):
         req = Request(uid=uid,
                       prompt=rng.integers(0, cfg.vocab_size, size=5).astype(np.int32),
                       max_new_tokens=4)
-        if not srv.submit(req):
-            srv.tick()
-            assert srv.submit(req) or True
-    done = srv.drain(max_ticks=200)
-    assert len(done) >= 4
+        assert srv.submit(req)  # queue admission: always accepted (no cap)
+    done, pending = srv.drain(max_ticks=200)
+    assert len(done) == 6 and not pending
     for r in done:
         assert len(r["tokens"]) == 4
         assert all(0 <= t < cfg.vocab_size for t in r["tokens"])
