@@ -1,0 +1,156 @@
+"""Elasticity / chaos benchmark (BENCH_elastic.json).
+
+Runs the single-fault chaos matrix (``FaultPlan.single_fault_matrix``) plus
+the 4->2->4 in-run resize plan on the paper's fc_mnist config over a
+4-worker fake-CPU mesh, and records per fault class: recovery latency,
+steps lost to replay (failed_step - restored_step), restart count, and
+whether the final parameters are bit-identical to an uninterrupted run.
+
+Bit-identity expectations are part of the record (``expect_bitexact``):
+crash / data_hiccup / save_fail / corrupt_ckpt recoveries replay the exact
+batch sequence from an exactly-restored state, so they MUST end
+bit-identical; straggler and resize plans change the update history by
+design (forced skips / a different worker set) and are instead asserted
+deterministic and complete. ``repro.analysis --check`` gates steps-lost
+and the bit-identity cells against ``analysis/baseline.json``.
+
+Run via:  PYTHONPATH=src python -m benchmarks.run --elastic [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+TOTAL_STEPS = 12
+CKPT_EVERY = 4
+FAULT_STEP = 7   # strictly between checkpoint steps 4 and 8: real replay
+WORKERS = 4
+
+NOTE = (
+    "CPU fake-device timing: recovery_latency_s is wall time of the "
+    "restore+reseek path only (recompiles excluded by the per-count build "
+    "cache). steps_lost counts replayed optimizer steps, bounded by "
+    "ckpt_every for any single fault. bitexact_vs_clean compares every "
+    "final parameter bit against an uninterrupted run on the same seed."
+)
+
+
+def _max_abs_diff(a, b):
+    import jax
+    import numpy as np
+
+    return max(
+        float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+        if np.asarray(x).size else 0.0
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_elastic.json") -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import PRESETS
+    from repro.data import indexed_classification_stream
+    from repro.data.synthetic import synthetic_classification
+    from repro.models import build
+    from repro.optim import constant
+    from repro.train import (
+        ElasticTrainer,
+        FaultPlan,
+        TrainerConfig,
+        WorkerMembership,
+    )
+
+    cfg = get_config("fc_mnist")
+    model = build(cfg)
+    scfg = PRESETS["sasg"](k_ratio=0.1)
+    xs, ys = synthetic_classification(256, cfg.vocab_size, (28, 28, 1), seed=0)
+    mem = WorkerMembership(model, scfg, constant(0.05), sasg_enabled=True)
+    built = mem.build(WORKERS)
+
+    def data():
+        return indexed_classification_stream(xs, ys, batch=8, seed=3)
+
+    def trainer(ckpt_dir, plan=None):
+        tc = TrainerConfig(
+            total_steps=TOTAL_STEPS, ckpt_dir=ckpt_dir,
+            ckpt_every=CKPT_EVERY, log_every=10**9, record_batches=True,
+        )
+        return ElasticTrainer(
+            built, data(), tc, membership=mem, plan=plan,
+            log_fn=lambda s: None,
+        )
+
+    plans = dict(
+        FaultPlan.single_fault_matrix(step=FAULT_STEP, workers=WORKERS)
+    )
+    plans["resize_4_2_4"] = (
+        FaultPlan().worker_drop(CKPT_EVERY, to=WORKERS // 2)
+        .worker_join(2 * CKPT_EVERY, to=WORKERS)
+    )
+    # the faults whose recovery must reproduce the clean run bit-for-bit
+    expect_bitexact = {
+        "crash", "corrupt_ckpt", "save_fail_transient", "save_fail_lost",
+        "data_hiccup",
+    }
+    if smoke:
+        plans = {k: plans[k] for k in ("crash", "worker_drop")}
+
+    cells = []
+    with tempfile.TemporaryDirectory() as root:
+        t_clean = trainer(os.path.join(root, "clean"))
+        clean = t_clean.run(init_key=jax.random.PRNGKey(7))
+
+        for name, plan in plans.items():
+            t0 = time.perf_counter()
+            t = trainer(os.path.join(root, name), plan=plan)
+            state = t.run(init_key=jax.random.PRNGKey(7))
+            wall = time.perf_counter() - t0
+            recoveries = [e for e in t.events if e["kind"] == "recovery"]
+            diff = _max_abs_diff(clean.params, state.params)
+            # replay integrity: the last consumption of every step index
+            # must match the clean run's batch exactly (zero skip/dup)
+            replay_ok = dict(t.batch_log) == dict(t_clean.batch_log)
+            cell = {
+                "plan": name,
+                "faults": [f.kind for f in plan.faults],
+                "completed": len(t.history) >= TOTAL_STEPS,
+                "restarts": len(recoveries),
+                "steps_lost": int(sum(e["steps_lost"] for e in recoveries)),
+                "recovery_latency_s": float(
+                    sum(e["latency_s"] for e in recoveries)
+                ),
+                "ckpt_lost": sum(1 for e in t.events if e["kind"] == "ckpt_lost"),
+                "resizes": sum(1 for e in t.events if e["kind"] == "resize"),
+                "max_param_diff_vs_clean": diff,
+                "bitexact_vs_clean": diff == 0.0,
+                "expect_bitexact": name in expect_bitexact,
+                "replay_exact": bool(replay_ok),
+                "wall_s": wall,
+            }
+            cells.append(cell)
+            print(
+                f"[elastic_bench] {name}: restarts={cell['restarts']} "
+                f"steps_lost={cell['steps_lost']} "
+                f"recovery={cell['recovery_latency_s']:.3f}s "
+                f"{'bitexact' if cell['bitexact_vs_clean'] else f'diff={diff:.2e}'}"
+            )
+
+    record = {
+        "arch": "fc_mnist",
+        "workers": WORKERS,
+        "total_steps": TOTAL_STEPS,
+        "ckpt_every": CKPT_EVERY,
+        "fault_step": FAULT_STEP,
+        "smoke": smoke,
+        "cells": cells,
+        "note": NOTE,
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[elastic_bench] {len(cells)} cells -> {out_path}")
+    return {"elastic": record}

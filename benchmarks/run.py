@@ -5,6 +5,7 @@ the roofline collector and the pipeline composition bench.
   PYTHONPATH=src python -m benchmarks.run --stages 2    # BENCH_pipeline.json
   PYTHONPATH=src python -m benchmarks.run --compressors # BENCH_compressors.json
   PYTHONPATH=src python -m benchmarks.run --serve       # BENCH_serve.json
+  PYTHONPATH=src python -m benchmarks.run --elastic     # BENCH_elastic.json
 """
 import argparse
 import os
@@ -25,12 +26,26 @@ def main():
     ap.add_argument("--serve", action="store_true",
                     help="run ONLY the continuous-batching serve bench "
                          "(dense vs paged KV cache); writes BENCH_serve.json")
+    ap.add_argument("--elastic", action="store_true",
+                    help="run ONLY the elasticity/chaos recovery bench "
+                         "(single-fault matrix + 4->2->4 resize); writes "
+                         "BENCH_elastic.json")
     ap.add_argument("--smoke", action="store_true",
-                    help="with --serve: one arch, one concurrency level "
-                         "(the CI smoke cell)")
+                    help="with --serve/--elastic: the reduced CI smoke cells")
     args = ap.parse_args()
 
     t0 = time.time()
+    if args.elastic:
+        # fake devices for the elastic worker meshes; must precede jax import
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8"
+        )
+        from benchmarks import elastic_bench
+
+        elastic_bench.run(smoke=args.smoke)
+        print(f"benchmarks.run complete in {time.time()-t0:.1f}s")
+        return 0
     if args.serve:
         # fake devices for the 2x2 serve mesh; must precede jax import
         os.environ["XLA_FLAGS"] = (

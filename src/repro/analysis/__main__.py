@@ -160,6 +160,50 @@ def main(argv=None) -> int:
                 print(f"[bench] serve: {len(paged_cells)} paged cell(s) "
                       f"bit-exact, high-water <= {ratio:.2f}x dense")
 
+        # elastic/chaos recovery gate (BENCH_elastic.json): every cell must
+        # complete within its restart budget, replay must stay within the
+        # steps-lost ceiling (bounded by ckpt_every for single faults), and
+        # fault classes that promise bit-identity vs an uninterrupted run
+        # (crash / data / save / corrupt-ckpt recoveries) must deliver it
+        eb = load_baseline().elastic_bench
+        if eb and os.path.exists("BENCH_elastic.json"):
+            with open("BENCH_elastic.json", encoding="utf-8") as fh:
+                ebench = json.load(fh)
+            ecells = ebench.get("cells", [])
+            if eb.get("require_cells") and not ecells:
+                print("  FAIL BENCH_elastic.json has no cells — regenerate "
+                      "via PYTHONPATH=src python -m benchmarks.run --elastic")
+                failed = True
+            max_lost = eb.get("max_steps_lost")
+            n_bad = 0
+            for c in ecells:
+                cell = c.get("plan", "?")
+                if not c.get("completed"):
+                    print(f"  FAIL elastic bench {cell}: run did not reach "
+                          f"total_steps (restarts={c.get('restarts')})")
+                    failed, n_bad = True, n_bad + 1
+                if max_lost is not None and c.get("steps_lost", 0) > max_lost:
+                    print(f"  FAIL elastic bench {cell}: {c.get('steps_lost')} "
+                          f"steps lost to replay exceeds the ceiling "
+                          f"{max_lost} (analysis/baseline.json "
+                          f"elastic_bench.max_steps_lost)")
+                    failed, n_bad = True, n_bad + 1
+                if (eb.get("require_bitexact")
+                        and c.get("expect_bitexact")
+                        and not c.get("bitexact_vs_clean")):
+                    print(f"  FAIL elastic bench {cell}: recovery promised "
+                          f"bit-identity but final params diverge by "
+                          f"{c.get('max_param_diff_vs_clean'):.2e}")
+                    failed, n_bad = True, n_bad + 1
+                if eb.get("require_replay_exact") and not c.get("replay_exact"):
+                    print(f"  FAIL elastic bench {cell}: batch replay skipped "
+                          f"or duplicated data (replay_exact=false)")
+                    failed, n_bad = True, n_bad + 1
+            if ecells and not n_bad:
+                print(f"[bench] elastic: {len(ecells)} chaos cell(s) "
+                      f"recovered, steps_lost <= {max_lost}, promised "
+                      f"bit-identity held")
+
     if args.write_baseline:
         audit_summary = None
         if audit_report is not None:

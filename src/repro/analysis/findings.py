@@ -75,6 +75,10 @@ class Baseline:
     # must be bit-exact vs its dense twin and keep its pool high-water at or
     # below the dense-equivalent bytes (times max_paged_over_dense_ratio)
     serve_bench: dict = field(default_factory=dict)
+    # elastic/chaos-bench gates (BENCH_elastic.json): every recovery cell
+    # must complete within max_steps_lost replayed steps, and cells whose
+    # fault class promises bit-identity (expect_bitexact) must deliver it
+    elastic_bench: dict = field(default_factory=dict)
 
     def accepts(self, f: Finding) -> bool:
         return f.fingerprint in self.entries
@@ -96,6 +100,7 @@ def load_baseline(path: Optional[str] = None) -> Baseline:
         audit=raw.get("audit", {}),
         pipeline_bench=raw.get("pipeline_bench", {}),
         serve_bench=raw.get("serve_bench", {}),
+        elastic_bench=raw.get("elastic_bench", {}),
     )
 
 
@@ -134,6 +139,7 @@ def write_baseline(
         "audit": audit if audit is not None else prev.audit,
         "pipeline_bench": prev.pipeline_bench,
         "serve_bench": prev.serve_bench,
+        "elastic_bench": prev.elastic_bench,
     }
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=1, sort_keys=True)

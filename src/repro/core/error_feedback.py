@@ -114,3 +114,19 @@ def remap_error_state(comp_state: Tree, shardings: Tree, mesh=None) -> Tree:
     return jax.tree.map(
         lambda x, s: jax.device_put(x, resolve(s)), comp_state, shardings
     )
+
+
+def worker_dims_match(wstate: Tree, num_workers: int) -> bool:
+    """True iff every worker-stacked leaf has leading dim ``num_workers``.
+
+    The elastic membership layer (``train.elastic``) uses this to decide
+    between the bit-exact carry (same worker set -> ``remap_error_state`` is
+    pure data movement) and the DESIGN.md §5 cold start (worker set changed
+    -> per-worker EF/stale state must be re-initialized; a stale residual
+    belongs to a worker that no longer exists)."""
+    leaves = jax.tree.leaves(wstate)
+    if not leaves:
+        return True  # plain strategy: no worker state, nothing to mismatch
+    return all(
+        jnp.ndim(x) >= 1 and x.shape[0] == num_workers for x in leaves
+    )

@@ -5,3 +5,9 @@ from .synthetic import (
     token_stream,
 )
 from .pipeline import ShardedLoader
+from .replay import (
+    ReplayableStream,
+    batch_fingerprint,
+    indexed_classification_stream,
+    indexed_token_stream,
+)

@@ -4,14 +4,33 @@ In a multi-host deployment each host feeds its addressable shard of the
 global batch (`jax.make_array_from_process_local_data`); in this single-host
 container the loader materializes the global batch and lets the sharding
 place it. Prefetch depth decouples host data generation from device step
-time (straggler hiding on the input side)."""
+time (straggler hiding on the input side).
+
+Failure contract: a worker-thread exception is delivered to the consumer as
+a poisoned sentinel — the next ``__next__`` re-raises the original exception
+(never a silent end-of-stream); source exhaustion delivers an end sentinel
+that raises ``StopIteration``. ``close()`` unblocks and joins the prefetch
+thread so no daemon thread outlives the consumer.
+"""
 from __future__ import annotations
 
 import queue
 import threading
 from typing import Iterator, Optional
 
-import jax
+
+class _Poison:
+    """Sentinel carrying the prefetch worker's exception to the consumer."""
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+_END = object()  # source exhausted: StopIteration at the consumer
+
+_PUT_POLL_S = 0.1  # worker put() poll so close() can always unblock it
 
 
 class ShardedLoader:
@@ -29,34 +48,63 @@ class ShardedLoader:
         self._thread.start()
 
     def _place(self, batch: dict):
+        import jax
+
         if self.shardings is None:
             return {k: jax.numpy.asarray(v) for k, v in batch.items()}
         return {
             k: jax.device_put(v, self.shardings.get(k)) for k, v in batch.items()
         }
 
+    def _put(self, item) -> bool:
+        """Bounded-queue put that stays interruptible by close()."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=_PUT_POLL_S)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _worker(self):
         try:
             for batch in self.source:
                 if self._stop.is_set():
                     return
-                self._q.put(self._place(batch))
-        except Exception as e:  # surface loader failures to the consumer
-            self._q.put(e)
+                if not self._put(self._place(batch)):
+                    return
+        except Exception as e:  # poisoned sentinel: consumer re-raises
+            self._put(_Poison(e))
+        else:
+            self._put(_END)
 
     def __iter__(self):
         return self
 
     def __next__(self):
         item = self._q.get()
+        if item is _END:
+            raise StopIteration
+        if isinstance(item, _Poison):
+            raise item.exc
+        # legacy contract: a bare Exception instance in the queue also raises
         if isinstance(item, Exception):
             raise item
         return item
 
-    def close(self):
+    def close(self, timeout: float = 5.0):
+        """Stop prefetching, drain the queue, and join the worker thread."""
         self._stop.set()
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+        self._thread.join(timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -1,0 +1,114 @@
+"""Deterministically replayable, step-indexed data streams (DESIGN.md §5).
+
+The elastic Trainer's recovery contract requires that batch ``t`` is a pure
+function of ``(seed, t)``: after any checkpoint restore or in-run mesh
+resize, the run must consume exactly the batch sequence an uninterrupted run
+would have consumed — zero skipped, zero duplicated. Python generators
+cannot provide that (they are consumed destructively; a failed step loses
+its batch forever), so the Trainer-facing source here is a
+:class:`ReplayableStream`: a step-indexed batch function behind a seekable
+cursor. ``Trainer`` calls ``seek(step)`` after every restore/resize, and the
+chaos suite asserts replay batch-by-batch via :func:`batch_fingerprint`.
+
+Per-step randomness derives from ``np.random.default_rng((seed, tag, step))``
+(a SeedSequence entropy tuple), so ``batch_at(t)`` never depends on how many
+batches were drawn before it.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable, Iterator
+
+import numpy as np
+
+# domain-separation tags so a token stream and a classification stream with
+# the same seed never alias each other's per-step rngs
+_TOKEN_TAG = 0x70CE
+_CLASS_TAG = 0xC1A5
+
+
+class ReplayableStream:
+    """Step-indexed batch source with a seekable cursor.
+
+    ``batch_fn(step) -> dict`` must be pure (same step, same batch). The
+    iterator protocol yields ``batch_fn(cursor)`` and advances; ``seek``
+    rewinds (or fast-forwards) the cursor so the Trainer can replay from a
+    restored checkpoint step.
+    """
+
+    def __init__(self, batch_fn: Callable[[int], dict], start: int = 0):
+        self._fn = batch_fn
+        self._cursor = int(start)
+
+    @property
+    def cursor(self) -> int:
+        return self._cursor
+
+    def seek(self, step: int) -> None:
+        if step < 0:
+            raise ValueError(f"cannot seek to negative step {step}")
+        self._cursor = int(step)
+
+    def batch_at(self, step: int) -> dict:
+        """The batch consumed at training step ``step`` (pure; cursor-free)."""
+        return self._fn(int(step))
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        batch = self._fn(self._cursor)
+        self._cursor += 1
+        return batch
+
+
+def indexed_token_stream(
+    vocab: int, batch: int, seq: int, seed: int = 0,
+    bigram_order: float = 0.8,
+) -> ReplayableStream:
+    """Replayable counterpart of ``synthetic.token_stream``: same planted
+    bigram structure (one fixed successor table per seed), but batch ``t`` is
+    generated from an rng keyed on ``(seed, t)`` instead of a shared
+    generator, so it is identical across any resize/restore history."""
+    trans = np.random.default_rng(seed).permutation(vocab)
+
+    def batch_fn(step: int) -> dict:
+        rng = np.random.default_rng((seed, _TOKEN_TAG, step))
+        toks = np.empty((batch, seq + 1), np.int32)
+        toks[:, 0] = rng.integers(0, vocab, size=batch)
+        follow = rng.random(size=(batch, seq)) < bigram_order
+        rand_next = rng.integers(0, vocab, size=(batch, seq))
+        for t in range(seq):
+            nxt = trans[toks[:, t]]
+            toks[:, t + 1] = np.where(follow[:, t], nxt, rand_next[:, t])
+        return {"tokens": toks[:, :-1].copy(), "labels": toks[:, 1:].copy()}
+
+    return ReplayableStream(batch_fn)
+
+
+def indexed_classification_stream(
+    x: np.ndarray, y: np.ndarray, batch: int, seed: int = 0
+) -> ReplayableStream:
+    """Replayable counterpart of ``synthetic.classification_stream``."""
+    n = x.shape[0]
+
+    def batch_fn(step: int) -> dict:
+        rng = np.random.default_rng((seed, _CLASS_TAG, step))
+        idx = rng.integers(0, n, size=batch)
+        return {"x": x[idx], "labels": y[idx]}
+
+    return ReplayableStream(batch_fn)
+
+
+def batch_fingerprint(batch: dict) -> str:
+    """Content hash of one batch (key-order independent). The chaos tests
+    compare per-step fingerprints between a faulted run and an uninterrupted
+    one to assert zero skipped / duplicated batches."""
+    h = hashlib.md5()
+    for k in sorted(batch):
+        v = np.asarray(batch[k])
+        h.update(k.encode())
+        h.update(str(v.dtype).encode())
+        h.update(str(v.shape).encode())
+        h.update(np.ascontiguousarray(v).tobytes())
+    return h.hexdigest()

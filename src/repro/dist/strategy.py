@@ -86,6 +86,16 @@ class Strategy:
         return tuple(self.grad_axes)
 
     @property
+    def membership(self) -> Tuple[bool, Tuple[str, ...], int]:
+        """Worker-membership identity: (uses_shard_map, worker_axes, M).
+
+        Two strategies with equal membership address the same worker set, so
+        an elastic resize between them carries SASG worker state bit-exactly
+        (pure resharding); unequal membership means the per-worker EF/stale
+        buffers must be re-initialized (DESIGN.md §5)."""
+        return (self.uses_shard_map, self.worker_axes, self.num_workers)
+
+    @property
     def inner_dp(self) -> Optional[str]:
         """The auto data axis inside the worker region, if any."""
         if not self.uses_shard_map or self.data_axis is None:

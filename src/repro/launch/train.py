@@ -53,6 +53,15 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--remat", default="none")
+    ap.add_argument("--resize", default=None,
+                    help="in-run elastic membership events: 'STEP:WORKERS,"
+                         "STEP:WORKERS,...' (e.g. '50:2,100:4' shrinks the "
+                         "worker axis to 2 at step 50, grows back to 4 at "
+                         "100 — no restart, state carried per DESIGN.md §5)")
+    ap.add_argument("--faults", default=None,
+                    help="chaos injection: 'KIND@STEP,...' with KIND in "
+                         "crash, straggler, corrupt_ckpt, save_fail, "
+                         "data_hiccup (e.g. 'crash@30,data_hiccup@70')")
     args = ap.parse_args(argv)
 
     shape = tuple(int(x) for x in args.mesh_shape.split(","))
@@ -72,15 +81,23 @@ def main(argv=None):
     from repro.configs import get_config
     from repro.core import PRESETS
     from repro.data import (
-        classification_stream,
+        indexed_classification_stream,
+        indexed_token_stream,
         synthetic_classification,
-        token_stream,
     )
     from repro.dist.strategy import choose_strategy
     from repro.launch.mesh import make_test_mesh
     from repro.models import build
     from repro.optim import constant
-    from repro.train import Trainer, TrainerConfig, build_train_step
+    from repro.train import (
+        ElasticTrainer,
+        Fault,
+        FaultPlan,
+        Trainer,
+        TrainerConfig,
+        WorkerMembership,
+        build_train_step,
+    )
     from repro.core.types import tree_bytes
 
     cfg = get_config(args.arch)
@@ -141,19 +158,18 @@ def main(argv=None):
               f"bits/upload paper={built.bits_paper:.3e} "
               f"wire={built.bits_wire:.3e}")
 
+    # replayable (step-indexed) streams: batch t is a pure function of
+    # (seed, t), so recovery and elastic resizes replay the exact batch
+    # sequence an uninterrupted run would consume (DESIGN.md §5)
     if cfg.family in ("mlp", "cnn"):
         # paper nets train on the synthetic classification mixture, not tokens
         img = (28, 28, 1) if cfg.family == "mlp" else (32, 32, 3)
         xs, ys = synthetic_classification(2048, cfg.vocab_size, img, seed=0)
-        stream = classification_stream(xs, ys, args.global_batch, seed=0)
+        stream = indexed_classification_stream(xs, ys, args.global_batch, seed=0)
     else:
-        stream = token_stream(cfg.vocab_size, args.global_batch, args.seq_len, seed=0)
-
-    def data():
-        import jax.numpy as jnp
-
-        for b in stream:
-            yield {k: jnp.asarray(v) for k, v in b.items()}
+        stream = indexed_token_stream(
+            cfg.vocab_size, args.global_batch, args.seq_len, seed=0
+        )
 
     tcfg = TrainerConfig(
         total_steps=args.steps,
@@ -161,7 +177,42 @@ def main(argv=None):
         ckpt_every=args.ckpt_every,
         log_every=max(args.steps // 20, 1),
     )
-    trainer = Trainer(built, data(), tcfg)
+    plan = None
+    if args.resize or args.faults:
+        plan = FaultPlan()
+        for item in (args.resize or "").split(",") if args.resize else ():
+            step_s, sep, workers_s = item.partition(":")
+            if not sep:
+                ap.error(f"--resize entry {item!r} is not 'STEP:WORKERS'")
+            step_i, target = int(step_s), int(workers_s)
+            cur = strategy.num_workers
+            plan = (plan.worker_drop(step_i, to=target) if target < cur
+                    else plan.worker_join(step_i, to=target))
+        for item in (args.faults or "").split(",") if args.faults else ():
+            kind, sep, step_s = item.partition("@")
+            if not sep:
+                ap.error(f"--faults entry {item!r} is not 'KIND@STEP'")
+            try:
+                plan = plan._with(Fault(kind, int(step_s)))
+            except ValueError as e:
+                ap.error(str(e))
+    if plan is not None:
+        def resized_mesh(n):
+            # keep the non-worker axes (model/stage) and retarget only the
+            # worker axis size; fake devices cap how far we can grow
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            wa = strategy.worker_axes[0] if strategy.worker_axes else "data"
+            sizes[wa] = n
+            return make_test_mesh(tuple(sizes.values()), tuple(sizes.keys()))
+
+        membership = WorkerMembership(
+            model, scfg, constant(args.lr), mesh_fn=resized_mesh,
+            sasg_enabled=args.algo != "sgd", params_bytes=params_bytes,
+        )
+        trainer = ElasticTrainer(built, stream, tcfg,
+                                 membership=membership, plan=plan)
+    else:
+        trainer = Trainer(built, stream, tcfg)
     state = trainer.run(init_key=jax.random.PRNGKey(0))
     print(f"[train] done: {args.steps} steps; total rounds "
           f"{float(state.counters.rounds):.0f}; bits(paper) "

@@ -1,3 +1,12 @@
 from .step import BuiltStep, TrainState, build_train_step
 from .loop import Trainer, TrainerConfig
+from .elastic import ElasticTrainer, WorkerMembership, fresh_worker_state, remap_state
+from .faults import (
+    DataStreamError,
+    Fault,
+    FaultInjector,
+    FaultPlan,
+    InjectedFault,
+    corrupt_checkpoint,
+)
 from . import checkpoint

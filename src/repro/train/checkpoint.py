@@ -1,13 +1,20 @@
 """Self-contained sharded checkpointing (no orbax in this container).
 
 Format: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf plus a
-``manifest.json`` (treedef, leaf paths, dtypes/shapes, checksums, step).
-Writes are atomic (tmp dir + rename) and optionally asynchronous (background
-thread; the trainer only blocks on the previous save). Restore re-places
-leaves under any sharding/mesh — this is the elastic-resize path: a
-checkpoint taken on one mesh restores onto another, and SASG worker state is
-re-initialized when the worker count changes (theory-safe: a fresh error
--feedback start, DESIGN.md §5).
+``manifest.json`` (treedef, leaf paths, dtypes/shapes, checksums, step, and
+a caller ``meta`` dict — the Trainer records the SASG worker count so an
+elastic restore knows when to re-initialize per-worker state). Writes are
+atomic (tmp dir + rename) and optionally asynchronous (background thread;
+the trainer only blocks on the previous save).
+
+Failure contract: the writer retries with exponential backoff
+(``retries``/``backoff``); if every attempt fails, the returned
+:class:`SaveHandle`'s ``join()`` raises :class:`CheckpointSaveError` — a
+dead writer thread is never silently indistinguishable from a successful
+save. Restore re-places leaves under any sharding/mesh — this is the
+elastic-resize path: a checkpoint taken on one mesh restores onto another,
+and SASG worker state is re-initialized when the worker count changes
+(theory-safe: a fresh error-feedback start, DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -16,12 +23,43 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+import time
+from typing import Any, List, Optional
 
 import jax
 import numpy as np
 
 _FLAG = "__ckpt_leaf__"
+
+
+class CheckpointSaveError(RuntimeError):
+    """Raised from ``SaveHandle.join()`` when every write attempt failed."""
+
+    def __init__(self, step: int, cause: BaseException):
+        super().__init__(
+            f"checkpoint step_{step} could not be written: "
+            f"{type(cause).__name__}: {cause}"
+        )
+        self.step = step
+        self.cause = cause
+
+
+class SaveHandle:
+    """Async-save handle. ``join()`` re-raises writer failures instead of
+    letting the Trainer join a dead thread and believe the save succeeded."""
+
+    def __init__(self, thread: threading.Thread, step: int):
+        self._thread = thread
+        self.step = step
+        self.error: Optional[CheckpointSaveError] = None
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._thread.join(timeout)
+        if self.error is not None:
+            raise self.error
+
+    def is_alive(self) -> bool:
+        return self._thread.is_alive()
 
 
 def _paths_and_leaves(tree):
@@ -35,16 +73,32 @@ def _paths_and_leaves(tree):
     return out, treedef
 
 
-def save(tree: Any, directory: str, step: int, blocking: bool = True) -> threading.Thread:
-    """Serialize `tree` to <directory>/step_<step>. Returns the writer thread."""
-    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+def save(
+    tree: Any,
+    directory: str,
+    step: int,
+    blocking: bool = True,
+    meta: Optional[dict] = None,
+    retries: int = 2,
+    backoff: float = 0.05,
+    fail_attempts: int = 0,
+) -> SaveHandle:
+    """Serialize `tree` to <directory>/step_<step>. Returns a SaveHandle.
 
-    def _write():
-        final = os.path.join(directory, f"step_{step}")
-        tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
+    ``meta`` is stored verbatim in the manifest (JSON-serializable).
+    ``fail_attempts`` is a fault-injection knob (``train.faults``): the first
+    N write attempts raise before touching disk, exercising the retry path.
+    """
+    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+    final = os.path.join(directory, f"step_{step}")
+    tmp = final + ".tmp"
+
+    def _write_once():
+        if os.path.exists(tmp):  # debris from a previous failed attempt
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
         leaves, _ = _paths_and_leaves(host_tree)
-        manifest = {"step": step, "leaves": []}
+        manifest = {"step": step, "meta": dict(meta or {}), "leaves": []}
         for i, (name, leaf) in enumerate(leaves):
             fname = f"{i:05d}.npy"
             np.save(os.path.join(tmp, fname), leaf)
@@ -63,22 +117,58 @@ def save(tree: Any, directory: str, step: int, blocking: bool = True) -> threadi
             shutil.rmtree(final)
         os.rename(tmp, final)
 
-    t = threading.Thread(target=_write)
+    def _run():
+        last: Optional[BaseException] = None
+        for attempt in range(retries + 1):
+            try:
+                if attempt < fail_attempts:
+                    raise OSError(
+                        f"injected save failure (attempt {attempt + 1})"
+                    )
+                _write_once()
+                return
+            except Exception as e:
+                last = e
+                shutil.rmtree(tmp, ignore_errors=True)
+                if attempt < retries:
+                    time.sleep(backoff * (2 ** attempt))
+        handle.error = CheckpointSaveError(step, last)
+
+    t = threading.Thread(target=_run)
+    handle = SaveHandle(t, step)
     t.start()
     if blocking:
-        t.join()
-    return t
+        handle.join()
+    return handle
 
 
-def latest_step(directory: str) -> Optional[int]:
+def candidate_steps(directory: str) -> List[int]:
+    """Committed checkpoint steps, newest first — the restore fallback
+    order: callers walk the list until one verifies. In-flight ``.tmp``
+    writes and manifest-less debris are never candidates."""
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for d in os.listdir(directory):
         if d.startswith("step_") and not d.endswith(".tmp"):
             if os.path.exists(os.path.join(directory, d, "manifest.json")):
                 steps.append(int(d.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps, reverse=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = candidate_steps(directory)
+    return steps[0] if steps else None
+
+
+def manifest_meta(directory: str, step: int) -> dict:
+    """The ``meta`` dict recorded at save time ({} for old checkpoints)."""
+    try:
+        with open(os.path.join(directory, f"step_{step}", "manifest.json")) as f:
+            manifest = json.load(f)
+        return dict(manifest.get("meta") or {})
+    except (OSError, json.JSONDecodeError):
+        return {}
 
 
 def verify(directory: str, step: int) -> bool:
@@ -91,7 +181,8 @@ def verify(directory: str, step: int) -> bool:
             if hashlib.md5(np.ascontiguousarray(leaf).tobytes()).hexdigest() != entry["crc"]:
                 return False
         return True
-    except (OSError, json.JSONDecodeError, KeyError):
+    except (OSError, json.JSONDecodeError, KeyError, ValueError):
+        # ValueError: np.load on a truncated/garbled .npy (corrupt header)
         return False
 
 
@@ -133,12 +224,12 @@ def restore(
 
 
 def gc_old(directory: str, keep: int = 3):
-    if not os.path.isdir(directory):
-        return
-    steps = sorted(
-        int(d.split("_")[1])
-        for d in os.listdir(directory)
-        if d.startswith("step_") and not d.endswith(".tmp")
-    )
-    for s in steps[:-keep]:
+    """Drop all but the newest ``keep`` committed checkpoints.
+
+    Safe against an in-flight async save: ``.tmp`` directories (a pending
+    atomic rename) are never candidates, and the newest committed steps are
+    always retained, so a rename landing mid-GC can only ever ADD a step
+    that is immediately in the kept set."""
+    steps = sorted(candidate_steps(directory))
+    for s in steps[:-keep] if keep > 0 else steps:
         shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)

@@ -1,0 +1,263 @@
+"""Elastic worker membership: in-run mesh resize without a full restart.
+
+SASG's adaptive aggregation (the LAG/LASG lineage) already tolerates stale
+and absent workers, so elasticity here is a scheduling/state-remap problem,
+not an algorithm change (DESIGN.md §5). A resize event:
+
+1. builds the new mesh and re-runs ``choose_strategy`` on it (the
+   flat/hierarchical/plain decision is re-taken — shrinking below the
+   replica-fit threshold can legitimately degrade to "plain");
+2. rebuilds the jitted step via ``build_train_step``;
+3. carries parameters, optimizer state, global SASG state, comm counters and
+   the run RNG **exactly** — ``device_put`` onto the new shardings is pure
+   data movement, bit-identical values;
+4. remaps SASG worker state: when the membership (worker axes + count) is
+   unchanged this is ``core.error_feedback.remap_error_state`` (bit-exact
+   resharding, e.g. a stage-count change); when the worker set changed the
+   per-worker error-feedback/stale buffers are **re-initialized from the
+   carried params** — a residual belongs to a worker that no longer exists,
+   and a fresh EF start is exactly the paper's t=0 condition, so convergence
+   guarantees keep holding;
+5. resumes the data stream at the same step index — with a replayable
+   stream (``repro.data.ReplayableStream``) batch ``t`` is identical across
+   any resize history.
+
+The same ``fresh_worker_state`` is used by the Trainer's restore path when a
+checkpoint's recorded worker count differs from the current strategy's, so
+in-run resize and restart-from-checkpoint elasticity land in bit-identical
+states (asserted by tests/test_elastic.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.core.error_feedback import remap_error_state, worker_dims_match
+from repro.dist.strategy import Strategy, choose_strategy
+
+from .faults import (
+    DataStreamError,
+    FaultInjector,
+    FaultPlan,
+    InjectedFault,
+    corrupt_checkpoint,
+)
+from .loop import Trainer, TrainerConfig
+from .step import BuiltStep, TrainState, build_train_step
+
+
+def fresh_worker_state(built: BuiltStep, params: Any) -> Any:
+    """Per-worker SASG state initialized from ``params`` (DESIGN.md §5 cold
+    start), worker-stacked to the strategy's M and placed on the built
+    shardings. Matches ``build_train_step.init_all`` exactly — stale_params
+    start at the CURRENT params (not the run's t=0 init), which is the LASG
+    t=0 condition relative to the resize point."""
+    if not built.strategy.uses_shard_map:
+        return ()
+    M = built.strategy.num_workers
+    ws = built.exchange.init_worker(params)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(
+            jnp.asarray(x)[None], (M,) + jnp.asarray(x).shape
+        ),
+        ws,
+    )
+    return jax.device_put(stacked, built.state_shardings.wstate)
+
+
+def remap_state(
+    state: TrainState,
+    new_built: BuiltStep,
+    old_strategy: Optional[Strategy] = None,
+) -> TrainState:
+    """Carry a TrainState onto a rebuilt step (new mesh/strategy).
+
+    params / opt_state / gstate / counters / rng move bit-exactly
+    (device_put onto the new shardings). wstate is carried bit-exactly iff
+    the worker membership is unchanged; otherwise re-initialized from the
+    carried params (module docstring)."""
+    sh = new_built.state_shardings
+    params = jax.device_put(state.params, sh.params)
+    opt_state = jax.device_put(state.opt_state, sh.opt_state)
+    counters = jax.device_put(state.counters, sh.counters)
+    rng = jax.device_put(state.rng, sh.rng)
+
+    new_strat = new_built.strategy
+    if not new_strat.uses_shard_map:
+        return TrainState(params, opt_state, (), (), counters, rng)
+
+    same_membership = (
+        old_strategy is not None
+        and old_strategy.membership == new_strat.membership
+        and worker_dims_match(state.wstate, new_strat.num_workers)
+    )
+    if same_membership:
+        wstate = remap_error_state(state.wstate, sh.wstate)
+    else:
+        wstate = fresh_worker_state(new_built, params)
+
+    if jax.tree.structure(state.gstate) == jax.tree.structure(
+        jax.eval_shape(new_built.exchange.init_global)
+    ):
+        gstate = jax.device_put(state.gstate, sh.gstate)
+    else:  # e.g. plain -> sasg: no global SASG state to carry
+        gstate = jax.device_put(new_built.exchange.init_global(), sh.gstate)
+    return TrainState(params, opt_state, wstate, gstate, counters, rng)
+
+
+class WorkerMembership:
+    """Factory mapping a worker count to a (mesh, strategy, BuiltStep) and
+    remapping state across resizes.
+
+    ``mesh_fn(num_workers)`` builds the post-resize mesh; the default builds
+    a 1-D ``("data",)`` mesh over the first ``num_workers`` local devices
+    (the CPU test topology). Built steps are cached per worker count —
+    growing back to a previous size reuses the compiled step.
+    """
+
+    def __init__(
+        self,
+        model,
+        sasg_cfg,
+        lr_schedule: Callable,
+        optimizer=None,
+        mesh_fn: Optional[Callable[[int], Any]] = None,
+        **choose_kwargs,
+    ):
+        self.model = model
+        self.sasg_cfg = sasg_cfg
+        self.lr_schedule = lr_schedule
+        self.optimizer = optimizer
+        self.mesh_fn = mesh_fn or self._default_mesh
+        self.choose_kwargs = dict(choose_kwargs)
+        self._cache: dict = {}
+
+    @staticmethod
+    def _default_mesh(num_workers: int):
+        devs = jax.devices()
+        if num_workers > len(devs):
+            raise ValueError(
+                f"cannot grow to {num_workers} workers on {len(devs)} devices"
+            )
+        return compat.make_mesh(
+            (num_workers,), ("data",),
+            devices=np.array(devs[:num_workers]),
+        )
+
+    def build(self, num_workers: int) -> BuiltStep:
+        if num_workers in self._cache:
+            return self._cache[num_workers]
+        mesh = self.mesh_fn(num_workers)
+        strategy = choose_strategy(mesh, **self.choose_kwargs)
+        built = build_train_step(
+            self.model, self.sasg_cfg, mesh, strategy,
+            self.lr_schedule, self.optimizer,
+        )
+        self._cache[num_workers] = built
+        return built
+
+    def resize(
+        self, state: TrainState, old_built: BuiltStep, num_workers: int
+    ) -> tuple[BuiltStep, TrainState]:
+        new_built = self.build(num_workers)
+        return new_built, remap_state(state, new_built, old_built.strategy)
+
+
+class ElasticTrainer(Trainer):
+    """Trainer with first-class membership events and fault injection.
+
+    ``membership`` enables in-run resizes (worker_drop/worker_join faults
+    retarget the worker axis without restarting); ``plan`` schedules faults
+    via :class:`~repro.train.faults.FaultInjector`. Per-step fault order is
+    fixed and documented: resize -> corrupt_ckpt -> save_fail arming ->
+    crash (raise) -> data hiccup (raise, from the batch fetch) ->
+    straggler mask (into the step). Everything else — recovery, replayable
+    data seek, checkpoint meta — is the base Trainer.
+    """
+
+    def __init__(
+        self,
+        built: BuiltStep,
+        data: Iterator[dict],
+        cfg: TrainerConfig,
+        membership: Optional[WorkerMembership] = None,
+        plan: Optional[FaultPlan] = None,
+        fault_hook=None,
+        log_fn=print,
+    ):
+        super().__init__(built, data, cfg, fault_hook=fault_hook, log_fn=log_fn)
+        self.membership = membership
+        self.injector = FaultInjector(plan) if plan is not None else None
+        if membership is not None:
+            # growing back re-hits this cache (and the ckpt-mismatch restore
+            # path builds at the recorded count without a recompile)
+            membership._cache.setdefault(built.strategy.num_workers, built)
+
+    # -- fault hooks -------------------------------------------------------
+
+    def _pre_step(self, state: TrainState, step: int) -> TrainState:
+        state = super()._pre_step(state, step)
+        inj = self.injector
+        if inj is None:
+            return state
+
+        target = inj.resize_to(step)
+        if target is not None and target != self.built.strategy.num_workers:
+            if self.membership is None:
+                raise RuntimeError(
+                    "FaultPlan schedules a membership event but the "
+                    "ElasticTrainer has no WorkerMembership"
+                )
+            old = self.built.strategy.num_workers
+            self.built, state = self.membership.resize(state, self.built, target)
+            self.log(
+                f"[trainer] step {step}: resized worker axis {old} -> "
+                f"{target} (strategy {self.built.strategy.name}, state "
+                "carried in-run)"
+            )
+            self.events.append(
+                {"kind": "resize", "step": step, "from": old, "to": target}
+            )
+
+        cf = inj.corrupt_at(step)
+        if cf is not None and self.cfg.ckpt_dir:
+            victim = corrupt_checkpoint(self.cfg.ckpt_dir, cf.target_step)
+            self.log(f"[trainer] step {step}: corrupted checkpoint step_{victim}")
+            self.events.append(
+                {"kind": "corrupt_ckpt", "step": step, "victim": victim}
+            )
+
+        attempts = inj.save_fail_attempts(step)
+        if attempts:
+            self._ckpt_fail_attempts = attempts
+            self.events.append(
+                {"kind": "save_fail_armed", "step": step, "attempts": attempts}
+            )
+
+        if inj.crash_at(step):
+            self.events.append({"kind": "crash", "step": step})
+            raise InjectedFault(f"injected node failure at step {step}")
+        return state
+
+    def _fetch_batch(self, step: int) -> dict:
+        if self.injector is not None and self.injector.data_hiccup_at(step):
+            self.events.append({"kind": "data_hiccup", "step": step})
+            raise DataStreamError(f"injected data-stream failure at step {step}")
+        return super()._fetch_batch(step)
+
+    def _force_skip(self, step: int):
+        if self.injector is None:
+            return super()._force_skip(step)
+        mask = self.injector.straggler_mask(
+            step, self.built.strategy.num_workers
+        )
+        if mask is not None:
+            self.events.append(
+                {"kind": "straggler", "step": step,
+                 "workers": [int(i) for i in np.flatnonzero(mask)]}
+            )
+        return mask

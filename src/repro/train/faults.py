@@ -1,0 +1,247 @@
+"""Composable fault-injection DSL for the chaos harness (DESIGN.md §5).
+
+A :class:`FaultPlan` is an immutable schedule of faults keyed on the
+training-step index, with a deterministic seed — the same plan replays the
+same fault sequence bit-for-bit, which is what lets the chaos suite assert
+final-parameter bit-identity against an uninterrupted run.
+
+Fault kinds and where the :class:`~repro.train.elastic.ElasticTrainer`
+applies them:
+
+==============  ==========================================================
+``crash``        raise :class:`InjectedFault` before the step (node loss;
+                 fired once, recovery restores + replays)
+``worker_drop``  resize the worker axis down to ``workers`` (stateless:
+                 re-applies after a post-crash rewind passes the step again)
+``worker_join``  resize the worker axis up to ``workers`` (stateless)
+``straggler``    force the LASG skip path for ``indices`` over ``duration``
+                 steps (drives ``force_skip`` — the algorithm's own M_c
+                 mechanism is the mitigation, no recovery involved)
+``corrupt_ckpt`` flip bytes in a committed checkpoint leaf (fired once;
+                 exercises the newest-*verified* restore fallback)
+``save_fail``    arm the next checkpoint save to fail its first
+                 ``attempts`` write attempts (fired once; ``attempts`` <=
+                 the writer's retry budget recovers transparently, more
+                 declares the checkpoint lost without killing the run)
+``data_hiccup``  raise :class:`DataStreamError` from the batch fetch
+                 (fired once; replayable streams make recovery lossless)
+==============  ==========================================================
+
+"Fired once" vs "stateless": faults that *raise or mutate disk* must not
+re-fire when recovery rewinds the step counter past their step (an infinite
+crash loop); membership/straggler faults are pure functions of the step
+index and MUST re-apply on replay so a rewound run re-traces the same
+membership history an uninterrupted run had.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """Simulated node failure raised by the crash fault."""
+
+
+class DataStreamError(RuntimeError):
+    """Simulated input-pipeline failure raised by the data_hiccup fault."""
+
+
+_ONCE_KINDS = frozenset({"crash", "corrupt_ckpt", "save_fail", "data_hiccup"})
+_STATELESS_KINDS = frozenset({"worker_drop", "worker_join", "straggler"})
+KINDS = _ONCE_KINDS | _STATELESS_KINDS
+
+
+@dataclass(frozen=True)
+class Fault:
+    kind: str
+    step: int
+    workers: int = 0                   # resize target (worker_drop/join)
+    indices: Tuple[int, ...] = ()      # straggler worker ids (() = 1 random)
+    duration: int = 1                  # straggler steps
+    attempts: int = 1                  # save_fail failing write attempts
+    target_step: Optional[int] = None  # corrupt_ckpt victim (None = newest)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.step < 0:
+            raise ValueError(f"fault step must be >= 0, got {self.step}")
+        if self.kind in ("worker_drop", "worker_join") and self.workers < 1:
+            raise ValueError(f"{self.kind} needs workers >= 1")
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Immutable fault schedule. Builder methods return extended copies, so
+    plans compose by chaining (or ``plan_a + plan_b``)::
+
+        plan = (FaultPlan(seed=7)
+                .worker_drop(step=20, to=2)
+                .worker_join(step=40, to=4)
+                .crash(step=55))
+    """
+
+    faults: Tuple[Fault, ...] = ()
+    seed: int = 0
+
+    def _with(self, fault: Fault) -> "FaultPlan":
+        return replace(self, faults=self.faults + (fault,))
+
+    def crash(self, step: int) -> "FaultPlan":
+        return self._with(Fault("crash", step))
+
+    def worker_drop(self, step: int, to: int) -> "FaultPlan":
+        return self._with(Fault("worker_drop", step, workers=to))
+
+    def worker_join(self, step: int, to: int) -> "FaultPlan":
+        return self._with(Fault("worker_join", step, workers=to))
+
+    def straggler(
+        self, step: int, indices: Tuple[int, ...] = (), duration: int = 1
+    ) -> "FaultPlan":
+        return self._with(
+            Fault("straggler", step, indices=tuple(indices), duration=duration)
+        )
+
+    def corrupt_ckpt(self, step: int, target_step: Optional[int] = None) -> "FaultPlan":
+        return self._with(Fault("corrupt_ckpt", step, target_step=target_step))
+
+    def save_fail(self, step: int, attempts: int = 1) -> "FaultPlan":
+        return self._with(Fault("save_fail", step, attempts=attempts))
+
+    def data_hiccup(self, step: int) -> "FaultPlan":
+        return self._with(Fault("data_hiccup", step))
+
+    def __add__(self, other: "FaultPlan") -> "FaultPlan":
+        if self.seed != other.seed:
+            raise ValueError("cannot compose FaultPlans with different seeds")
+        return replace(self, faults=self.faults + other.faults)
+
+    def __len__(self) -> int:
+        return len(self.faults)
+
+    @classmethod
+    def single_fault_matrix(
+        cls,
+        step: int = 7,
+        workers: int = 4,
+        save_retries: int = 2,
+        seed: int = 0,
+    ) -> Dict[str, "FaultPlan"]:
+        """The chaos-matrix plans — one fault class per plan, all injected at
+        ``step`` (which should land strictly between two checkpoint steps so
+        recovery exercises real replay). ``corrupt_ckpt`` pairs the byte-flip
+        with a crash at the same step: corruption alone is invisible until a
+        restore happens."""
+        return {
+            "crash": cls(seed=seed).crash(step),
+            "worker_drop": cls(seed=seed).worker_drop(step, to=max(workers // 2, 1)),
+            "straggler": cls(seed=seed).straggler(step, duration=2),
+            "corrupt_ckpt": cls(seed=seed).corrupt_ckpt(step).crash(step),
+            "save_fail_transient": cls(seed=seed).save_fail(step, attempts=save_retries),
+            "save_fail_lost": cls(seed=seed).save_fail(step, attempts=save_retries + 2),
+            "data_hiccup": cls(seed=seed).data_hiccup(step),
+        }
+
+
+class FaultInjector:
+    """Stateful reader of a :class:`FaultPlan` used by the ElasticTrainer.
+
+    Fired-once bookkeeping applies only to ``_ONCE_KINDS`` (module
+    docstring); membership and straggler queries are pure functions of the
+    step index. Per-fault randomness (e.g. which worker straggles when
+    ``indices`` is empty) derives from ``default_rng((seed, fault_index))``
+    so it is stable across recovery replays.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._fired: set = set()
+
+    def _take(self, step: int, kind: str) -> Optional[Fault]:
+        """The first unfired fault of ``kind`` at ``step`` (marks it fired)."""
+        for i, f in enumerate(self.plan.faults):
+            if f.kind == kind and f.step == step and i not in self._fired:
+                self._fired.add(i)
+                return f
+        return None
+
+    # -- stateless (replayed on rewind) -----------------------------------
+
+    def resize_to(self, step: int) -> Optional[int]:
+        """Target worker count if a membership event is scheduled at step."""
+        for f in self.plan.faults:
+            if f.kind in ("worker_drop", "worker_join") and f.step == step:
+                return f.workers
+        return None
+
+    def straggler_mask(self, step: int, num_workers: int) -> Optional[np.ndarray]:
+        """(num_workers,) bool force_skip mask, or None when no straggler is
+        active at ``step``. Active over [f.step, f.step + f.duration)."""
+        mask = None
+        for i, f in enumerate(self.plan.faults):
+            if f.kind != "straggler" or not (f.step <= step < f.step + f.duration):
+                continue
+            if mask is None:
+                mask = np.zeros(num_workers, bool)
+            idx = f.indices or (
+                int(np.random.default_rng((self.plan.seed, i)).integers(num_workers)),
+            )
+            for w in idx:
+                mask[w % num_workers] = True
+        return mask
+
+    # -- fired-once (never replayed) --------------------------------------
+
+    def crash_at(self, step: int) -> bool:
+        return self._take(step, "crash") is not None
+
+    def corrupt_at(self, step: int) -> Optional[Fault]:
+        return self._take(step, "corrupt_ckpt")
+
+    def save_fail_attempts(self, step: int) -> int:
+        f = self._take(step, "save_fail")
+        return f.attempts if f is not None else 0
+
+    def data_hiccup_at(self, step: int) -> bool:
+        return self._take(step, "data_hiccup") is not None
+
+
+def corrupt_checkpoint(
+    ckpt_dir: str,
+    step: Optional[int] = None,
+    rng: Optional[np.random.Generator] = None,
+) -> Optional[int]:
+    """Flip bytes in the middle of one leaf file of a committed checkpoint
+    (newest when ``step`` is None). Returns the corrupted step, or None when
+    no checkpoint exists. Payload bytes are flipped (not the npy header), so
+    the file still loads — only the CRC check can catch it."""
+    import os
+
+    from . import checkpoint as CKPT
+
+    steps = CKPT.candidate_steps(ckpt_dir)
+    if not steps:
+        return None
+    victim = step if step is not None else steps[0]
+    path = os.path.join(ckpt_dir, f"step_{victim}")
+    npys = sorted(f for f in os.listdir(path) if f.endswith(".npy"))
+    if not npys:
+        return None
+    rng = rng or np.random.default_rng(0)
+    target = npys[int(rng.integers(len(npys)))]
+    fpath = os.path.join(path, target)
+    size = os.path.getsize(fpath)
+    with open(fpath, "r+b") as f:
+        # stay clear of the ~128-byte npy header so np.load still succeeds
+        pos = max(size // 2, 192)
+        if pos >= size:
+            pos = size - 1
+        f.seek(pos)
+        chunk = f.read(min(8, size - pos))
+        f.seek(pos)
+        f.write(bytes(b ^ 0xFF for b in chunk))
+    return victim

@@ -1,15 +1,29 @@
 """Fault-tolerant training loop.
 
-- periodic async checkpointing (atomic commit, keep-last-N GC);
-- automatic restore-and-continue on step failure (node-failure simulation:
-  a fault hook can raise mid-run and the Trainer recovers from the last
-  valid checkpoint);
-- straggler hook: a per-step deadline flag is forwarded into the SASG
+- periodic async checkpointing (atomic commit, keep-last-N GC) with
+  surfaced save failures: the writer retries with backoff and a checkpoint
+  that still cannot be written is declared LOST (logged + recorded in
+  ``events``) instead of silently pretending success — a lost checkpoint
+  never rolls back training, it only widens the replay window of the next
+  recovery;
+- automatic restore-and-continue on step failure, falling back through
+  checkpoint candidates newest-first until one passes ``verify`` (a corrupt
+  latest checkpoint costs replay distance, not the run);
+- deterministic replay: recovery reseeks the data source to the restored
+  step (``repro.data.ReplayableStream``), so the batch sequence an
+  interrupted run consumes is identical to an uninterrupted one — zero
+  skipped, zero duplicated. Non-seekable iterators keep the legacy lossy
+  behavior with a one-time warning;
+- straggler hook: a per-step worker mask is forwarded into the SASG
   selection rule as force_skip (the algorithm's own M_c path doubles as the
-  mitigation mechanism — DESIGN.md §5).
+  mitigation mechanism — DESIGN.md §5);
+- subclass hooks (``_pre_step`` / ``_fetch_batch`` / ``_force_skip``) are
+  the extension surface used by ``train.elastic.ElasticTrainer`` for in-run
+  membership resizes and fault injection.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Callable, Iterator, Optional
 
@@ -28,6 +42,7 @@ class TrainerConfig:
     ckpt_async: bool = True
     log_every: int = 10
     max_restarts: int = 3
+    record_batches: bool = False  # log (step, fingerprint) per applied batch
 
 
 class Trainer:
@@ -44,53 +59,160 @@ class Trainer:
         self.cfg = cfg
         self.fault_hook = fault_hook
         self.log = log_fn
-        self._save_thread = None
+        self._save_handle: Optional[CKPT.SaveHandle] = None
+        self._ckpt_fail_attempts = 0  # armed by fault injection (save_fail)
+        self._init_key = None
+        self._warned_unseekable = False
         self.history: list[dict] = []
+        self.events: list[dict] = []      # resizes, recoveries, lost ckpts
+        self.batch_log: list[tuple] = []  # (step, fingerprint) when recording
 
     # -- checkpointing -----------------------------------------------------
+
+    def _ckpt_meta(self) -> dict:
+        # the restore path needs the worker count to decide whether SASG
+        # worker state can be carried or must be re-initialized (elastic)
+        return {"num_workers": self.built.strategy.num_workers}
+
+    def _join_save(self):
+        """Block on the in-flight async save; surface (never swallow) its
+        failure. A lost checkpoint is an event, not a training error."""
+        if self._save_handle is None:
+            return
+        handle, self._save_handle = self._save_handle, None
+        try:
+            handle.join()
+        except CKPT.CheckpointSaveError as e:
+            self.log(f"[trainer] checkpoint LOST: {e}")
+            self.events.append(
+                {"kind": "ckpt_lost", "step": handle.step, "error": str(e.cause)}
+            )
 
     def _maybe_ckpt(self, state: TrainState, step: int, force=False):
         c = self.cfg
         if not c.ckpt_dir:
             return
         if force or (step > 0 and step % c.ckpt_every == 0):
-            if self._save_thread is not None:
-                self._save_thread.join()  # backpressure: one in flight
-            self._save_thread = CKPT.save(
-                state, c.ckpt_dir, step, blocking=not c.ckpt_async
-            )
+            self._join_save()  # backpressure: one in flight
+            fail_attempts, self._ckpt_fail_attempts = self._ckpt_fail_attempts, 0
+            try:
+                handle = CKPT.save(
+                    state, c.ckpt_dir, step, blocking=not c.ckpt_async,
+                    meta=self._ckpt_meta(), fail_attempts=fail_attempts,
+                )
+            except CKPT.CheckpointSaveError as e:  # blocking save exhausted retries
+                self.log(f"[trainer] checkpoint LOST: {e}")
+                self.events.append(
+                    {"kind": "ckpt_lost", "step": step, "error": str(e.cause)}
+                )
+            else:
+                if c.ckpt_async:
+                    self._save_handle = handle
             CKPT.gc_old(c.ckpt_dir, c.ckpt_keep)
 
     def _restore_latest(self, template: TrainState) -> tuple[TrainState, int]:
+        """Newest *verified* checkpoint, falling back through older
+        candidates when verification fails (corrupt/truncated files)."""
         c = self.cfg
-        step = CKPT.latest_step(c.ckpt_dir) if c.ckpt_dir else None
-        if step is None:
+        if not c.ckpt_dir:
             return template, 0
-        if not CKPT.verify(c.ckpt_dir, step):
-            self.log(f"[trainer] checkpoint step_{step} failed verification; skipping")
-            return template, 0
-        state = CKPT.restore(
-            template, c.ckpt_dir, step, shardings=self.built.state_shardings
-        )
-        self.log(f"[trainer] restored checkpoint at step {step}")
+        for step in CKPT.candidate_steps(c.ckpt_dir):
+            if not CKPT.verify(c.ckpt_dir, step):
+                self.log(
+                    f"[trainer] checkpoint step_{step} failed verification; "
+                    "trying an older one"
+                )
+                continue
+            state = CKPT.restore(
+                template, c.ckpt_dir, step, shardings=self.built.state_shardings
+            )
+            saved_m = CKPT.manifest_meta(c.ckpt_dir, step).get("num_workers")
+            m = self.built.strategy.num_workers
+            if (
+                self.built.strategy.uses_shard_map
+                and saved_m is not None
+                and saved_m != m
+            ):
+                # elastic restart: the checkpoint's worker set is gone, so
+                # per-worker state restores as template debris — re-init it
+                # from the RESTORED params (same cold start the in-run
+                # resize uses, DESIGN.md §5)
+                from .elastic import fresh_worker_state
+
+                state = state._replace(
+                    wstate=fresh_worker_state(self.built, state.params)
+                )
+                self.log(
+                    f"[trainer] worker count changed {saved_m} -> {m}; "
+                    "re-initialized SASG worker state from restored params"
+                )
+            self.log(f"[trainer] restored checkpoint at step {step}")
+            return state, step
+        return template, 0
+
+    # -- subclass hooks (ElasticTrainer) -----------------------------------
+
+    def _pre_step(self, state: TrainState, step: int) -> TrainState:
+        """Before the batch fetch; may raise (node failure) or swap
+        ``self.built`` + remap ``state`` (membership resize)."""
+        if self.fault_hook is not None:
+            self.fault_hook(step)  # legacy hook; may raise
+        return state
+
+    def _fetch_batch(self, step: int) -> dict:
+        """The batch for training step ``step``. Replayable sources are
+        indexed directly (pure in ``step``); plain iterators are consumed."""
+        if hasattr(self.data, "batch_at"):
+            return self.data.batch_at(step)
+        return next(self.data)
+
+    def _force_skip(self, step: int):
+        """(M,) bool straggler mask for this step, or None (no stragglers)."""
+        return None
+
+    def _seek(self, step: int, initial: bool = False):
+        if hasattr(self.data, "seek"):
+            self.data.seek(step)
+        elif initial and step == 0:
+            pass  # a fresh iterator at a fresh start: nothing to rewind
+        elif not self._warned_unseekable:
+            self._warned_unseekable = True
+            self.log(
+                "[trainer] WARNING: data source is not seekable; batches "
+                "between the restored checkpoint and the failure are lost "
+                "(use repro.data.ReplayableStream for exact replay)"
+            )
+
+    def _recover(self) -> tuple[TrainState, int]:
+        # satellite fix: the restore template must use the caller's init key
+        # — a fresh-start recovery with PRNGKey(0) would silently change the
+        # run's initialization
+        template = self.built.init(self._init_key)
+        state, step = self._restore_latest(template)
+        self._seek(step)
         return state, step
 
     # -- main loop ----------------------------------------------------------
 
     def run(self, init_key=None, state: Optional[TrainState] = None) -> TrainState:
         c = self.cfg
+        self._init_key = init_key if init_key is not None else jax.random.PRNGKey(0)
         if state is None:
-            state = self.built.init(init_key if init_key is not None else jax.random.PRNGKey(0))
+            state = self.built.init(self._init_key)
         state, start = self._restore_latest(state)
+        self._seek(start, initial=True)
 
         step = start
         restarts = 0
         while step < c.total_steps:
             try:
-                batch = next(self.data)
-                if self.fault_hook is not None:
-                    self.fault_hook(step)  # may raise (simulated node failure)
-                state, mets = self.built.jit_step(state, batch)
+                state = self._pre_step(state, step)
+                batch = self._fetch_batch(step)
+                fs = self._force_skip(step)
+                if fs is None:
+                    state, mets = self.built.jit_step(state, batch)
+                else:
+                    state, mets = self.built.jit_step(state, batch, fs)
                 if step % c.log_every == 0 or step == c.total_steps - 1:
                     loss = float(mets["loss"])
                     sent = float(mets["num_sent"])
@@ -101,6 +223,10 @@ class Trainer:
                         f"bits(paper) {float(mets['bits_paper_total']):.3e}"
                     )
                 self.history.append({k: float(v) for k, v in mets.items()})
+                if c.record_batches:
+                    from repro.data.replay import batch_fingerprint
+
+                    self.batch_log.append((step, batch_fingerprint(batch)))
                 step += 1
                 self._maybe_ckpt(state, step)
             except KeyboardInterrupt:
@@ -109,11 +235,24 @@ class Trainer:
                 restarts += 1
                 if restarts > c.max_restarts:
                     raise
-                self.log(f"[trainer] step {step} failed ({type(e).__name__}: {e}); "
-                         f"recovering ({restarts}/{c.max_restarts})")
-                template = self.built.init(jax.random.PRNGKey(0))
-                state, step = self._restore_latest(template)
+                t0 = time.monotonic()
+                self.log(
+                    f"[trainer] step {step} failed ({type(e).__name__}: {e}); "
+                    f"recovering ({restarts}/{c.max_restarts})"
+                )
+                self._join_save()  # commit (or mourn) the in-flight save first
+                state, new_step = self._recover()
+                self.events.append(
+                    {
+                        "kind": "recovery",
+                        "failed_step": step,
+                        "restored_step": new_step,
+                        "steps_lost": step - new_step,
+                        "error": type(e).__name__,
+                        "latency_s": time.monotonic() - t0,
+                    }
+                )
+                step = new_step
         self._maybe_ckpt(state, step, force=True)
-        if self._save_thread is not None:
-            self._save_thread.join()
+        self._join_save()
         return state

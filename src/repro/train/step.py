@@ -393,7 +393,7 @@ def build_train_step(
     # ------------------------------------------------------------------
     if strategy.uses_shard_map:
 
-        def worker_fn(params, batch, wstate, gstate, lr, key):
+        def worker_fn(params, batch, wstate, gstate, lr, key, fs=None):
             wstate = strip_worker_axis(wstate)
             if strategy.inner_dp and compat.PARTIAL_AUTO_SHARD_MAP:
                 batch = jax.tree.map(
@@ -403,8 +403,13 @@ def build_train_step(
                     batch,
                 )
             key = jax.random.fold_in(key, _worker_index(waxes))
+            # fs: replicated (M,) bool straggler mask (train.faults) — each
+            # worker picks its own flag; None traces exactly the unfaulted
+            # program (no gates added)
+            force_skip = fs[_worker_index(waxes)] if fs is not None else None
             update, new_wstate, info = exchange.run(
-                params, batch, wstate, gstate, lr, key, worker_vag
+                params, batch, wstate, gstate, lr, key, worker_vag,
+                force_skip=force_skip,
             )
             # pin the densified update to the parameter sharding over the
             # AUTO axes (otherwise XLA replicates the fp32 update tree —
@@ -468,7 +473,7 @@ def build_train_step(
                 pass
             return base
 
-        def step(state: TrainState, batch):
+        def step(state: TrainState, batch, force_skip=None):
             lr = lr_schedule(state.gstate.step)
             key = jax.random.fold_in(state.rng, state.gstate.step)
 
@@ -480,6 +485,8 @@ def build_train_step(
                 P(),
                 P(),
             )
+            if force_skip is not None:
+                in_specs = in_specs + (P(),)  # replicated (M,) bool mask
             # outputs: update (params-structured, replicated), worker state
             # (same structure as input, worker-stacked), info (5 scalars with
             # a singleton worker dim)
@@ -495,9 +502,10 @@ def build_train_step(
                 worker_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                 axis_names=manual, check_vma=False,
             )
-            update, wstate, info = sm(
-                state.params, batch, state.wstate, state.gstate, lr, key
-            )
+            args = (state.params, batch, state.wstate, state.gstate, lr, key)
+            if force_skip is not None:
+                args = args + (jnp.asarray(force_skip, bool),)
+            update, wstate, info = sm(*args)
 
             if fold_lr:
                 delta, opt_state = update, state.opt_state
@@ -559,7 +567,9 @@ def build_train_step(
 
     else:
 
-        def step(state: TrainState, batch):
+        def step(state: TrainState, batch, force_skip=None):
+            # plain SPMD has no selection rule: a straggler mask is meaningless
+            # (every worker contributes to the dense psum) and is ignored
             count = state.counters.rounds.astype(jnp.int32)
             lr = lr_schedule(count)
             loss, grads = vag(state.params, batch)
@@ -583,14 +593,31 @@ def build_train_step(
                 mets,
             )
 
-    def jit_step(state, batch):
+    def jit_step(state, batch, force_skip=None):
+        # jax.jit caches wrappers on (fun, options): the no-mask call builds
+        # the SAME jitted program as before this arg existed, and the masked
+        # call gets its own cached 3-arg wrapper (used by the straggler
+        # fault path; mask is a traced (M,) bool so flipping workers between
+        # steps does NOT retrace)
+        if force_skip is None:
+            fn = jax.jit(
+                step,
+                in_shardings=(state_shardings, batch_sharding_fn(batch)),
+                out_shardings=(state_shardings, None),
+                donate_argnums=(0,) if donate else (),
+            )
+            return fn(state, batch)
         fn = jax.jit(
             step,
-            in_shardings=(state_shardings, batch_sharding_fn(batch)),
+            in_shardings=(
+                state_shardings,
+                batch_sharding_fn(batch),
+                NamedSharding(mesh, P()),
+            ),
             out_shardings=(state_shardings, None),
             donate_argnums=(0,) if donate else (),
         )
-        return fn(state, batch)
+        return fn(state, batch, jnp.asarray(force_skip, bool))
 
     def init(key):
         if compat.HAS_AXIS_TYPES:

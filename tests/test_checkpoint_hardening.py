@@ -1,0 +1,181 @@
+"""Checkpoint failure contract + data-pipeline hardening.
+
+Covers the robustness satellites: save-failure propagation (the writer
+thread must never die silently), bounded retry with backoff, newest-first
+candidate fallback, verify catching truncated npy payloads, GC vs an
+in-flight async save, strict_worker_dim restore, and the ShardedLoader
+poisoned-sentinel / close() contract."""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.data import ShardedLoader
+from repro.train import checkpoint as CKPT
+from repro.train.faults import corrupt_checkpoint
+
+
+def _tree(v=0.0):
+    return {
+        "a": np.full((64, 3), v, np.float32),
+        "b": {"c": np.arange(6, dtype=np.int32)},
+    }
+
+
+# -- save failure propagation ---------------------------------------------
+
+
+def test_blocking_save_failure_raises(tmp_path):
+    with pytest.raises(CKPT.CheckpointSaveError) as ei:
+        CKPT.save(_tree(), str(tmp_path), 1, blocking=True,
+                  retries=1, backoff=0.0, fail_attempts=5)
+    assert ei.value.step == 1
+    # no half-written checkpoint left behind
+    assert CKPT.candidate_steps(str(tmp_path)) == []
+
+
+def test_async_save_failure_raises_on_join(tmp_path):
+    handle = CKPT.save(_tree(), str(tmp_path), 2, blocking=False,
+                       retries=0, backoff=0.0, fail_attempts=3)
+    with pytest.raises(CKPT.CheckpointSaveError):
+        handle.join()
+
+
+def test_save_retries_through_transient_failures(tmp_path):
+    # fail_attempts <= retries: the backoff loop eats the failures
+    h = CKPT.save(_tree(1.5), str(tmp_path), 3, blocking=True,
+                  retries=2, backoff=0.0, fail_attempts=2)
+    assert h.error is None
+    assert CKPT.verify(str(tmp_path), 3)
+    got = CKPT.restore(_tree(), str(tmp_path), 3)
+    np.testing.assert_array_equal(np.asarray(got["a"]), _tree(1.5)["a"])
+
+
+def test_save_records_meta(tmp_path):
+    CKPT.save(_tree(), str(tmp_path), 4, meta={"num_workers": 4})
+    assert CKPT.manifest_meta(str(tmp_path), 4) == {"num_workers": 4}
+    assert CKPT.manifest_meta(str(tmp_path), 999) == {}
+
+
+# -- candidate ordering + verification fallback ---------------------------
+
+
+def test_candidate_steps_newest_first_skips_debris(tmp_path):
+    for s in (1, 5, 3):
+        CKPT.save(_tree(float(s)), str(tmp_path), s)
+    os.makedirs(tmp_path / "step_7.tmp")          # in-flight write
+    os.makedirs(tmp_path / "step_9")              # manifest-less debris
+    assert CKPT.candidate_steps(str(tmp_path)) == [5, 3, 1]
+    assert CKPT.latest_step(str(tmp_path)) == 5
+
+
+def test_verify_catches_truncated_leaf(tmp_path):
+    CKPT.save(_tree(2.0), str(tmp_path), 1)
+    assert CKPT.verify(str(tmp_path), 1)
+    leaf = tmp_path / "step_1" / "00000.npy"
+    with open(leaf, "r+b") as f:
+        f.truncate(16)  # np.load raises ValueError on the mangled header
+    assert not CKPT.verify(str(tmp_path), 1)
+
+
+def test_corrupt_checkpoint_fails_verify_only_the_victim(tmp_path):
+    CKPT.save(_tree(1.0), str(tmp_path), 1)
+    CKPT.save(_tree(2.0), str(tmp_path), 2)
+    victim = corrupt_checkpoint(str(tmp_path))  # newest
+    assert victim == 2
+    assert not CKPT.verify(str(tmp_path), 2)
+    assert CKPT.verify(str(tmp_path), 1)
+
+
+# -- GC vs in-flight async save -------------------------------------------
+
+
+def test_gc_never_touches_inflight_tmp(tmp_path):
+    for s in range(1, 6):
+        CKPT.save(_tree(float(s)), str(tmp_path), s)
+    os.makedirs(tmp_path / "step_6.tmp")  # pending atomic rename
+    CKPT.gc_old(str(tmp_path), keep=2)
+    assert CKPT.candidate_steps(str(tmp_path)) == [5, 4]
+    assert (tmp_path / "step_6.tmp").is_dir()
+    # the rename landing after GC yields a normal, newest candidate
+    os.rename(tmp_path / "step_6.tmp", tmp_path / "step_6")
+    with open(tmp_path / "step_6" / "manifest.json", "w") as f:
+        json.dump({"step": 6, "meta": {}, "leaves": []}, f)
+    assert CKPT.latest_step(str(tmp_path)) == 6
+
+
+def test_gc_racing_async_save_keeps_result_consistent(tmp_path):
+    # run GC concurrently with async saves; every surviving candidate must
+    # still verify (no torn directories)
+    handles = [
+        CKPT.save(_tree(float(s)), str(tmp_path), s, blocking=False)
+        for s in range(1, 7)
+    ]
+    t = threading.Thread(
+        target=lambda: [CKPT.gc_old(str(tmp_path), keep=2) for _ in range(20)]
+    )
+    t.start()
+    for h in handles:
+        h.join()
+    t.join()
+    CKPT.gc_old(str(tmp_path), keep=2)
+    survivors = CKPT.candidate_steps(str(tmp_path))
+    assert len(survivors) == 2
+    assert all(CKPT.verify(str(tmp_path), s) for s in survivors)
+
+
+# -- strict_worker_dim ----------------------------------------------------
+
+
+def test_restore_strict_worker_dim_on_worker_count_change(tmp_path):
+    saved = {"wstate": np.arange(12, dtype=np.float32).reshape(4, 3)}
+    CKPT.save(saved, str(tmp_path), 1)
+    template = {"wstate": np.zeros((2, 3), np.float32)}  # 4 -> 2 workers
+    with pytest.raises(ValueError, match="shape mismatch"):
+        CKPT.restore(template, str(tmp_path), 1, strict_worker_dim=True)
+    # non-strict: elastic fallback to the template leaf
+    got = CKPT.restore(template, str(tmp_path), 1)
+    np.testing.assert_array_equal(np.asarray(got["wstate"]), template["wstate"])
+
+
+# -- ShardedLoader failure contract ---------------------------------------
+
+
+def test_loader_propagates_worker_exception():
+    def source():
+        yield {"x": np.zeros(2)}
+        yield {"x": np.ones(2)}
+        raise ValueError("disk died mid-epoch")
+
+    loader = ShardedLoader(source(), shardings=None, prefetch=2)
+    next(loader), next(loader)
+    with pytest.raises(ValueError, match="disk died mid-epoch"):
+        next(loader)
+    loader.close()
+
+
+def test_loader_raises_stopiteration_on_exhaustion():
+    loader = ShardedLoader(
+        iter([{"x": np.zeros(2)}] * 3), shardings=None, prefetch=2
+    )
+    assert len(list(loader)) == 3  # no hang, clean StopIteration
+    loader.close()
+
+
+def test_loader_close_joins_prefetch_thread():
+    def infinite():
+        while True:
+            yield {"x": np.zeros((1024,))}
+
+    loader = ShardedLoader(infinite(), shardings=None, prefetch=1)
+    next(loader)
+    loader.close()
+    assert not loader._thread.is_alive()
+
+
+def test_loader_context_manager():
+    with ShardedLoader(iter([{"x": np.zeros(2)}]), shardings=None) as loader:
+        next(loader)
+    assert not loader._thread.is_alive()

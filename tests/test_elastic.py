@@ -1,0 +1,196 @@
+"""Elastic worker membership (train.elastic): in-run 4->2->4 resize is
+bit-identical to restart-from-checkpoint elasticity on the same schedule,
+state remapping carries/reinitializes exactly per DESIGN.md §5, recovery
+templates use the caller's init key, and the replayable data stream yields
+batch t identically across any resize/restore history."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PRESETS
+from repro.core.error_feedback import worker_dims_match
+from repro.data import (
+    ReplayableStream,
+    batch_fingerprint,
+    indexed_classification_stream,
+)
+from repro.data.synthetic import synthetic_classification
+from repro.models import build
+from repro.optim import constant
+from repro.train import (
+    ElasticTrainer,
+    FaultPlan,
+    Trainer,
+    TrainerConfig,
+    WorkerMembership,
+)
+from repro.train.elastic import fresh_worker_state, remap_state
+
+TOTAL, EVERY = 12, 4
+SEED_DATA, SEED_INIT = 3, 7
+
+
+def _pdiff(sa, sb):
+    return max(
+        float(np.max(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
+        for a, b in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sb.params))
+    )
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("fc_mnist")
+    model = build(cfg)
+    scfg = PRESETS["sasg"](k_ratio=0.1)
+    xs, ys = synthetic_classification(256, cfg.vocab_size, (28, 28, 1), seed=0)
+    mem = WorkerMembership(model, scfg, constant(0.05), sasg_enabled=True)
+
+    def data():
+        return indexed_classification_stream(xs, ys, batch=8, seed=SEED_DATA)
+
+    return mem, data
+
+
+@pytest.fixture(scope="module")
+def clean_run(setup, tmp_path_factory):
+    mem, data = setup
+    built = mem.build(4)
+    tc = TrainerConfig(
+        total_steps=TOTAL, ckpt_dir=str(tmp_path_factory.mktemp("clean")),
+        ckpt_every=EVERY, log_every=10**9, record_batches=True,
+    )
+    tr = Trainer(built, data(), tc, log_fn=lambda s: None)
+    state = tr.run(init_key=jax.random.PRNGKey(SEED_INIT))
+    return state, tr.batch_log
+
+
+# -- replayable stream ----------------------------------------------------
+
+
+def test_replayable_stream_is_pure_and_seekable():
+    s = indexed_classification_stream(
+        np.random.default_rng(0).normal(size=(32, 4)).astype(np.float32),
+        np.zeros(32, np.int32), batch=4, seed=11,
+    )
+    first = [batch_fingerprint(next(s)) for _ in range(5)]
+    s.seek(0)
+    assert [batch_fingerprint(next(s)) for _ in range(5)] == first
+    assert batch_fingerprint(s.batch_at(3)) == first[3]
+    assert s.cursor == 5  # batch_at never moves the cursor
+    with pytest.raises(ValueError):
+        s.seek(-1)
+
+
+def test_replayable_stream_batch_fn_contract():
+    s = ReplayableStream(lambda t: {"x": np.full(2, t, np.float32)})
+    assert next(s)["x"][0] == 0 and next(s)["x"][0] == 1
+    s.seek(10)
+    assert next(s)["x"][0] == 10
+
+
+# -- state remapping ------------------------------------------------------
+
+
+def test_remap_same_membership_is_bitexact(setup):
+    mem, _ = setup
+    built = mem.build(4)
+    state = built.init(jax.random.PRNGKey(0))
+    out = remap_state(state, built, built.strategy)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_remap_resize_carries_params_reinits_worker_state(setup):
+    mem, _ = setup
+    b4, b2 = mem.build(4), mem.build(2)
+    state = b4.init(jax.random.PRNGKey(0))
+    out = remap_state(state, b2, b4.strategy)
+    # params / opt / gstate / counters / rng carried bit-exactly
+    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(out.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(state.rng), np.asarray(out.rng))
+    # wstate re-stacked to the new worker count, re-initialized from the
+    # carried params (stale_params == params on every worker row)
+    assert worker_dims_match(out.wstate, 2)
+    assert not worker_dims_match(out.wstate, 4)
+    fresh = fresh_worker_state(b2, out.params)
+    for a, b in zip(jax.tree.leaves(out.wstate), jax.tree.leaves(fresh)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_membership_property_drives_the_carry_decision(setup):
+    mem, _ = setup
+    b4, b2 = mem.build(4), mem.build(2)
+    assert b4.strategy.membership != b2.strategy.membership
+    assert b4.strategy.membership == mem.build(4).strategy.membership
+
+
+# -- the acceptance test: in-run resize == restart elasticity -------------
+
+
+def test_inrun_resize_4_2_4_matches_restart_elasticity(setup, clean_run, tmp_path):
+    mem, data = setup
+    clean_state, clean_log = clean_run
+
+    # Leg A: one ElasticTrainer, membership events at the checkpoint steps
+    plan = FaultPlan().worker_drop(EVERY, to=2).worker_join(2 * EVERY, to=4)
+    tc = TrainerConfig(
+        total_steps=TOTAL, ckpt_dir=str(tmp_path / "inrun"),
+        ckpt_every=EVERY, log_every=10**9, record_batches=True,
+    )
+    tr_a = ElasticTrainer(
+        mem.build(4), data(), tc, membership=mem, plan=plan,
+        log_fn=lambda s: None,
+    )
+    state_a = tr_a.run(init_key=jax.random.PRNGKey(SEED_INIT))
+    assert [e["kind"] for e in tr_a.events] == ["resize", "resize"]
+    assert tr_a.built.strategy.num_workers == 4
+
+    # Leg B: restart-from-checkpoint elasticity — three Trainer processes
+    # sharing one checkpoint dir, each phase on its own worker count
+    ck = str(tmp_path / "restart")
+    state_b = None
+    for workers, upto in ((4, EVERY), (2, 2 * EVERY), (4, TOTAL)):
+        tcb = TrainerConfig(
+            total_steps=upto, ckpt_dir=ck, ckpt_every=EVERY,
+            log_every=10**9, record_batches=True,
+        )
+        tr_b = Trainer(mem.build(workers), data(), tcb, log_fn=lambda s: None)
+        state_b = tr_b.run(init_key=jax.random.PRNGKey(SEED_INIT))
+
+    # bit-identical final parameters across the two elasticity mechanisms
+    assert _pdiff(state_a, state_b) == 0.0
+
+    # zero skipped / duplicated batches: every step consumed exactly once,
+    # and each batch is the one the uninterrupted run consumed at that step
+    assert [s for s, _ in tr_a.batch_log] == list(range(TOTAL))
+    assert tr_a.batch_log == clean_log
+
+    # a resize changes the update history (worker set changed), so leg A is
+    # NOT bit-identical to the uninterrupted run — only to leg B
+    assert _pdiff(state_a, clean_state) > 0.0
+
+
+# -- recovery template uses the caller's init key -------------------------
+
+
+def test_recovery_reinit_uses_caller_init_key(setup, clean_run):
+    """No checkpoint dir: recovery falls back to a fresh start. The restore
+    template must be built from the caller's init_key — with the old
+    PRNGKey(0) template the recovered run silently diverges from its own
+    initialization (and from the clean run)."""
+    mem, data = setup
+    clean_state, _ = clean_run
+    plan = FaultPlan().crash(2)
+    tc = TrainerConfig(total_steps=TOTAL, ckpt_dir=None, log_every=10**9)
+    tr = ElasticTrainer(
+        mem.build(4), data(), tc, membership=mem, plan=plan,
+        log_fn=lambda s: None,
+    )
+    state = tr.run(init_key=jax.random.PRNGKey(SEED_INIT))
+    assert [e["kind"] for e in tr.events] == ["crash", "recovery"]
+    assert tr.events[-1]["restored_step"] == 0  # fresh start, no checkpoint
+    assert _pdiff(state, clean_state) == 0.0
